@@ -1,0 +1,70 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark module exposes ``run() -> list[Row]``; ``benchmarks.run``
+aggregates them into the ``name,us_per_call,derived`` CSV. ``us_per_call``
+is the wall-clock microseconds spent producing that row (one serving
+experiment / one kernel call); ``derived`` is the row's headline metric.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable, List, Optional
+
+from repro.core import (
+    ProfileTable,
+    SchedulerConfig,
+    make_scheduler,
+    paper_rate_vector,
+    run_experiment,
+)
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+# Default sweep (paper: lambda_152 from 20 to 240 req/s on the RTX 3080).
+LAMBDAS = (20, 60, 100, 140, 180, 220, 240)
+HORIZON = 10.0
+SEED = 7
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def serving_row(
+    name: str,
+    scheduler_name: str,
+    table: ProfileTable,
+    lam: float,
+    slo: float = 0.050,
+    rates=None,
+    sched_table: Optional[ProfileTable] = None,
+    model_map=None,
+    horizon: float = HORIZON,
+) -> "tuple[Row, object]":
+    """One serving experiment -> CSV row + metrics."""
+    cfg = SchedulerConfig(slo=slo, max_batch=10)
+    sched = make_scheduler(scheduler_name, sched_table or table, cfg)
+    res, us = timed(
+        run_experiment, sched, table,
+        rates if rates is not None else paper_rate_vector(lam),
+        horizon=horizon, seed=SEED, model_map=model_map,
+    )
+    m = res.metrics
+    derived = (
+        f"p95_ms={m.p95_latency*1e3:.2f};viol={m.violation_ratio*100:.2f}%;"
+        f"acc={m.mean_accuracy*100:.2f}%;depth={m.mean_exit_depth:.2f}"
+    )
+    return Row(name, us, derived), m

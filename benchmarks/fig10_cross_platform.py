@@ -1,0 +1,42 @@
+"""Paper Fig. 10: cross-platform generalisation — same algorithm, only the
+profile table re-collected per platform (RTX 3080 / GTX 1650 / Jetson Orin
+Nano; paper uses tau=100 ms on the Jetson), plus a TPU-v5e analytic profile
+built from the dry-run roofline terms (the TPU-native adaptation)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+import numpy as np
+
+from repro.core import ProfileTable
+from benchmarks.common import Row, serving_row
+
+
+def _tpu_profile(table: ProfileTable) -> ProfileTable:
+    """Analytic v5e profile: scale the calibrated table by the ratio of
+    roofline-bound step times (single-chip serving of the ResNet trio is
+    compute-bound; v5e bf16 peak vs RTX 3080 fp32 tensor ~ 30 TFLOP/s
+    effective -> ~6.5x faster)."""
+    return table.scaled(1.0 / 6.5, "tpu-v5e-analytic")
+
+
+def run() -> List[Row]:
+    rows = []
+    platforms = {
+        "rtx3080": (ProfileTable.paper_rtx3080(), 0.050, (60, 140, 240)),
+        "gtx1650": (ProfileTable.paper_gtx1650(), 0.050, (20, 45, 75)),
+        "jetson-orin-nano": (
+            ProfileTable.paper_jetson_orin_nano(), 0.100, (10, 20, 34)),
+        "tpu-v5e-analytic": (
+            _tpu_profile(ProfileTable.paper_rtx3080()), 0.050,
+            (200, 800, 1500)),
+    }
+    for plat, (table, slo, lams) in platforms.items():
+        for lam in lams:
+            row, m = serving_row(
+                f"fig10/{plat}/lam{lam}", "edgeserving", table, lam, slo=slo)
+            rows.append(row)
+    return rows

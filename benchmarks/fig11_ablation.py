@@ -1,0 +1,23 @@
+"""Paper Fig. 11: ablation of the core design components —
+Early-Exit+LQF, Early-Exit+EDF, All-Final+Deadline-Aware, Ours+bs=1 vs the
+full scheduler."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import ProfileTable
+from benchmarks.common import LAMBDAS, Row, serving_row
+
+VARIANTS = ("edgeserving", "earlyexit-lqf", "earlyexit-edf",
+            "allfinal-deadline-aware", "ours-bs1")
+
+
+def run() -> List[Row]:
+    table = ProfileTable.paper_rtx3080()
+    rows = []
+    for sched in VARIANTS:
+        for lam in LAMBDAS:
+            row, _ = serving_row(f"fig11/{sched}/lam{lam}", sched, table, lam)
+            rows.append(row)
+    return rows

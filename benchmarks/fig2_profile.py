@@ -1,0 +1,34 @@
+"""Paper Fig. 2: profiled inference latency vs batch size for all models and
+exit points. Emits the L(m, e, B) table and checks its three trends."""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import ProfileTable
+from benchmarks.common import Row, timed
+
+
+def run() -> List[Row]:
+    table, us = timed(ProfileTable.paper_rtx3080)
+    rows = []
+    for mi, m in enumerate(table.model_names):
+        for ei, e in enumerate(table.exit_names):
+            lat = table.latency[mi, ei]
+            rows.append(Row(
+                f"fig2/{m}/{e}", us / 12.0,
+                f"L_b1_ms={lat[0]*1e3:.3f};L_b10_ms={lat[-1]*1e3:.3f};"
+                f"growth={lat[-1]/lat[0]:.2f}x",
+            ))
+    # trend summary (paper Sec. IV-C)
+    growth = table.latency[:, :, -1] / table.latency[:, :, 0]
+    deep = table.latency[2, 3, :] / table.latency[2, 0, :]
+    rows.append(Row(
+        "fig2/trends", us,
+        f"batch_growth_1_to_10={growth.min():.2f}-{growth.max():.2f}x"
+        f"(paper:2-3x);r152_final_over_layer1={deep.mean():.1f}x(paper:6-8x);"
+        f"ordering_r50<r101<r152={bool(np.all(np.diff(table.latency, axis=0) > 0))}",
+    ))
+    return rows

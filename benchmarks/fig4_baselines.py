@@ -1,0 +1,19 @@
+"""Paper Fig. 4: P95 latency + SLO violation ratio vs traffic intensity for
+All-Final / All-Early / Symphony / EdgeServing."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import ProfileTable
+from benchmarks.common import LAMBDAS, Row, serving_row
+
+
+def run() -> List[Row]:
+    table = ProfileTable.paper_rtx3080()
+    rows = []
+    for sched in ("edgeserving", "all-final", "all-early", "symphony"):
+        for lam in LAMBDAS:
+            row, _ = serving_row(f"fig4/{sched}/lam{lam}", sched, table, lam)
+            rows.append(row)
+    return rows

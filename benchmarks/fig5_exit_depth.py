@@ -1,0 +1,25 @@
+"""Paper Fig. 5: average early-exit depth vs traffic intensity (deep exits
+at low load, progressive shallowing under load)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import ProfileTable
+from benchmarks.common import LAMBDAS, Row, serving_row
+
+
+def run() -> List[Row]:
+    table = ProfileTable.paper_rtx3080()
+    rows = []
+    depths = []
+    for lam in LAMBDAS:
+        row, m = serving_row(f"fig5/edgeserving/lam{lam}", "edgeserving",
+                             table, lam)
+        depths.append(m.mean_exit_depth)
+        rows.append(row)
+    monotone = all(a >= b - 0.05 for a, b in zip(depths, depths[1:]))
+    rows.append(Row("fig5/trend", 0.0,
+                    f"depths={['%.2f' % d for d in depths]};"
+                    f"shallowing_with_load={monotone}"))
+    return rows

@@ -1,0 +1,29 @@
+"""Paper Fig. 6: accuracy vs P95 latency Pareto curve traced by the
+scheduler as traffic intensity varies (graceful degradation)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import ProfileTable
+from benchmarks.common import Row, serving_row
+
+
+def run() -> List[Row]:
+    table = ProfileTable.paper_rtx3080()
+    rows = []
+    pts = []
+    for lam in (20, 60, 100, 140, 180, 220, 240):
+        row, m = serving_row(f"fig6/pareto/lam{lam}", "edgeserving", table,
+                             lam)
+        pts.append((m.p95_latency * 1e3, m.mean_accuracy * 100))
+        rows.append(row)
+    # paper: 76.75% @ 27.47ms (lam=20) -> 60.38% @ 44.46ms (lam>=180)
+    lo, hi = pts[0], pts[-1]
+    rows.append(Row(
+        "fig6/summary", 0.0,
+        f"low_traffic=({lo[0]:.1f}ms,{lo[1]:.1f}%);"
+        f"high_traffic=({hi[0]:.1f}ms,{hi[1]:.1f}%);"
+        f"graceful={hi[1] > 40 and hi[0] < 50}",
+    ))
+    return rows

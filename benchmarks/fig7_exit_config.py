@@ -1,0 +1,29 @@
+"""Paper Fig. 7: impact of the available exit-point configuration
+(layer1+final / layer2+final / layer3+final / all_exits). The scheduler's
+view of the profile is restricted; execution uses the matching view."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import ProfileTable, SchedulerConfig, make_scheduler
+from benchmarks.common import Row, serving_row
+
+CONFIGS = {
+    "layer1+final": (0, 3),
+    "layer2+final": (1, 3),
+    "layer3+final": (2, 3),
+    "all_exits": (0, 1, 2, 3),
+}
+
+
+def run() -> List[Row]:
+    table = ProfileTable.paper_rtx3080()
+    rows = []
+    for name, exits in CONFIGS.items():
+        view = table.restrict_exits(exits)
+        for lam in (100, 160, 200, 240):
+            row, m = serving_row(
+                f"fig7/{name}/lam{lam}", "edgeserving", view, lam)
+            rows.append(row)
+    return rows

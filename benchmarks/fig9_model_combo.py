@@ -1,0 +1,32 @@
+"""Paper Fig. 9: model-combination robustness under equal traffic
+(homogeneous 3xR50 / 3xR101 / 3xR152 and heterogeneous mixes)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import ProfileTable
+from benchmarks.common import Row, serving_row
+
+COMBOS = {
+    "3xR50": [0, 0, 0],
+    "3xR101": [1, 1, 1],
+    "3xR152": [2, 2, 2],
+    "R50+R101+R152": [0, 1, 2],
+    "2xR50+R152": [0, 0, 2],
+    "R50+2xR152": [0, 2, 2],
+}
+
+
+def run() -> List[Row]:
+    table = ProfileTable.paper_rtx3080()
+    rows = []
+    for name, mix in COMBOS.items():
+        view = table.select_models(mix)
+        for lam in (60, 120, 180):
+            # equal rates (paper: 1:1:1 to unconfound heterogeneity)
+            row, m = serving_row(
+                f"fig9/{name}/lam{lam}", "edgeserving", view, lam,
+                rates=[lam, lam, lam])
+            rows.append(row)
+    return rows

@@ -1,0 +1,76 @@
+"""Kernel microbenchmarks on CPU: jnp reference paths (jitted; the honest
+CPU numbers) for attention/exit-head/rmsnorm at serving-relevant shapes.
+Pallas kernels are validated in interpret mode (tests/) and targeted at
+TPU; interpret-mode wall time is not meaningful, so the CSV reports the
+reference-path throughput these kernels must beat on device."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.exit_head.ref import exit_head_ref
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from benchmarks.common import Row
+
+
+def _time(fn, *args, n=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> List[Row]:
+    rows = []
+    key = jax.random.key(0)
+
+    # prefill attention (per-layer slice of a 4k-ctx batch)
+    b, h, kh, s, d = 1, 8, 2, 1024, 64
+    q = jax.random.normal(key, (b, h, s, d), jnp.float32)
+    k = jax.random.normal(key, (b, kh, s, d), jnp.float32)
+    v = jax.random.normal(key, (b, kh, s, d), jnp.float32)
+    fa = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    us = _time(fa, q, k, v)
+    flops = 4 * b * h * s * s * d
+    rows.append(Row(f"micro/attn-ref/b{b}h{h}s{s}d{d}", us,
+                    f"gflops_cpu={flops/us/1e3:.2f}"))
+
+    # decode attention against a 32k cache slice
+    s_kv = 8192
+    q1 = jax.random.normal(key, (4, h, d))
+    k1 = jax.random.normal(key, (4, kh, s_kv, d))
+    v1 = jax.random.normal(key, (4, kh, s_kv, d))
+    lens = jnp.full((4,), s_kv, jnp.int32)
+    da = jax.jit(decode_attention_ref)
+    us = _time(da, q1, k1, v1, lens)
+    gb = 2 * 4 * kh * s_kv * d * 4 / 1e9
+    rows.append(Row(f"micro/decode-ref/b4h{h}kv{s_kv}", us,
+                    f"cache_gb_per_s={gb/(us/1e6):.2f}"))
+
+    # exit head at smollm scale
+    t, dm, vv = 256, 576, 49152
+    hh = jax.random.normal(key, (t, dm))
+    g = jnp.ones((dm,))
+    w = jax.random.normal(key, (dm, vv)) * 0.02
+    eh = jax.jit(exit_head_ref)
+    us = _time(eh, hh, g, w)
+    rows.append(Row(f"micro/exit-head-ref/t{t}d{dm}v{vv}", us,
+                    f"gflops_cpu={2*t*dm*vv/us/1e3:.2f}"))
+
+    # rmsnorm
+    x = jax.random.normal(key, (4096, 4096))
+    g2 = jnp.ones((4096,))
+    rn = jax.jit(lambda x, g: rmsnorm_ref(x, g, 1e-6))
+    us = _time(rn, x, g2)
+    rows.append(Row("micro/rmsnorm-ref/4096x4096", us,
+                    f"gb_per_s={2*x.nbytes/us/1e3:.2f}"))
+    return rows

@@ -1,0 +1,69 @@
+"""Scheduler-step microbenchmarks: the online decision must fit inside the
+inter-quantum gap (sub-millisecond). Compares the paper's loop scheduler,
+the vectorised NumPy variant, and the Pallas scoring kernel (interpret mode
+on CPU — TPU numbers come from the same call with interpret=False)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    EdgeServingScheduler,
+    ProfileTable,
+    QueueSnapshot,
+    SchedulerConfig,
+    VectorizedEdgeServingScheduler,
+)
+from repro.kernels.stability_score.ops import stability_scores
+from benchmarks.common import Row
+
+
+def _snapshot(m_count: int, qlen: int, seed: int = 0) -> QueueSnapshot:
+    rng = np.random.default_rng(seed)
+    waits = [np.sort(rng.uniform(0, 0.06, qlen))[::-1].copy()
+             for _ in range(m_count)]
+    return QueueSnapshot(0.0, waits)
+
+
+def _time(fn, n=50):
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> List[Row]:
+    rows = []
+    table = ProfileTable.paper_rtx3080()
+    cfg = SchedulerConfig(slo=0.05)
+    for m_count, qlen in [(3, 16), (3, 256), (3, 2048)]:
+        snap = _snapshot(m_count, qlen)
+        loop = EdgeServingScheduler(table, cfg)
+        vec = VectorizedEdgeServingScheduler(table, cfg)
+        us_loop = _time(lambda: loop.decide(snap))
+        us_vec = _time(lambda: vec.decide(snap))
+        rows.append(Row(f"micro/scheduler-loop/M{m_count}xQ{qlen}", us_loop,
+                        f"decisions_per_s={1e6/us_loop:.0f}"))
+        rows.append(Row(f"micro/scheduler-vec/M{m_count}xQ{qlen}", us_vec,
+                        f"decisions_per_s={1e6/us_vec:.0f};"
+                        f"speedup={us_loop/us_vec:.2f}x"))
+
+    # fused Pallas scoring (interpret mode: correctness-path timing only)
+    m_count, qlen = 8, 512
+    snap = _snapshot(m_count, qlen)
+    w, mask = snap.padded()
+    w = jnp.asarray(w, jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+    lat = jnp.full((m_count,), 0.005, jnp.float32)
+    bat = jnp.full((m_count,), 10, jnp.int32)
+    fn = lambda: stability_scores(
+        w, mask, lat, bat, tau=0.05, interpret=True).block_until_ready()
+    us = _time(fn, n=10)
+    rows.append(Row(f"micro/stability-kernel-interp/M{m_count}xQ{qlen}", us,
+                    "pallas_interpret_cpu"))
+    return rows

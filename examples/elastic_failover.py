@@ -1,0 +1,81 @@
+"""Fault-tolerance walkthrough: checkpoint -> simulated preemption ->
+elastic restore. Trains a tiny early-exit LM, checkpoints asynchronously,
+"kills" the run mid-flight, then restores from the last committed step and
+verifies training continues bit-exactly from the checkpoint.
+
+  PYTHONPATH=src python examples/elastic_failover.py
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import synthetic_memorization_corpus
+from repro.models import build_model, split_params
+from repro.optim import AdamW
+from repro.runtime.checkpoint import Checkpointer
+from repro.runtime.fault_tolerance import ElasticMesh, PreemptionGuard
+from repro.runtime.trainer import make_train_step
+
+
+def main():
+    cfg = get_config("smollm-135m", smoke=True)
+    model = build_model(cfg)
+    values, _ = split_params(model.init(jax.random.key(0)))
+    opt = AdamW(lr=3e-3, weight_decay=0.0)
+    opt_state = opt.init(values)
+    step_fn = jax.jit(make_train_step(model, opt))
+    batch = synthetic_memorization_corpus(cfg.vocab_size)
+
+    with tempfile.TemporaryDirectory() as root:
+        ck = Checkpointer(root, keep=2)
+        guard = PreemptionGuard()
+
+        print("== phase 1: train 30 steps, checkpoint every 10 ==")
+        losses = []
+        for step in range(30):
+            values, opt_state, metrics = step_fn(values, opt_state, batch,
+                                                 step)
+            losses.append(float(metrics["loss"]))
+            if (step + 1) % 10 == 0:
+                ck.save(step + 1, {"values": values, "opt": opt_state})
+            if step == 24:
+                guard.request_stop()  # preemption notice arrives
+            if guard.should_stop():
+                ck.save(step + 1, {"values": values, "opt": opt_state})
+                print(f"preempted at step {step + 1}: drained + checkpointed "
+                      f"(loss {losses[-1]:.4f})")
+                break
+        ck.wait()
+
+        print(f"committed checkpoints: {ck.committed_steps()}")
+
+        print("== phase 2: elastic restart ==")
+        em = ElasticMesh(model_axis=1)
+        mesh, accum = em.build()
+        print(f"rebuilt mesh over {mesh.devices.size} device(s), "
+              f"grad-accum multiplier {accum}")
+        step0, state, _ = ck.restore(
+            template={"values": values, "opt": opt_state})
+        values2, opt2 = state["values"], state["opt"]
+        print(f"restored step {step0}")
+
+        # continue; the restored run must match an uninterrupted one
+        v_a, o_a = values, opt_state
+        v_b, o_b = values2, opt2
+        for step in range(step0, step0 + 5):
+            v_a, o_a, m_a = step_fn(v_a, o_a, batch, step)
+            v_b, o_b, m_b = step_fn(v_b, o_b, batch, step)
+        diff = max(
+            float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+            for x, y in zip(jax.tree.leaves(v_a), jax.tree.leaves(v_b))
+        )
+        print(f"post-restore divergence vs uninterrupted run: {diff:.2e}")
+        assert diff < 1e-6
+        print("restart is bit-faithful: OK")
+
+
+if __name__ == "__main__":
+    main()

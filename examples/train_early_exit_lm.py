@@ -1,0 +1,37 @@
+"""End-to-end training driver: joint early-exit LM training with
+checkpoint/restart. Defaults to a CPU-sized model; ``--full`` trains the
+real smollm-135m config (the ~100M-class model) — same code path.
+
+  PYTHONPATH=src python examples/train_early_exit_lm.py --steps 200
+  PYTHONPATH=src python examples/train_early_exit_lm.py --full --steps 300
+"""
+
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true",
+                    help="train the full smollm-135m config (slow on CPU)")
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "smollm-135m",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "64",
+        "--checkpoint-dir", args.checkpoint_dir,
+        "--checkpoint-every", "50",
+    ]
+    if not args.full:
+        cmd.append("--smoke")
+    print("+", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""EdgeServing core: the paper's primary contribution in host-framework form.
+
+Deadline-aware multi-DNN serving under time-division accelerator sharing:
+FIFO service queues, the offline profile table L(m, e, B), the stability
+score (Eq. 3-4), the one-step-greedy online scheduler (Algorithm 1), the
+baseline/ablation policies, and the event-driven serving simulator that the
+paper-figure benchmarks run on.
+"""
+
+from repro.core.baselines import (
+    SCHEDULERS,
+    AllEarlyScheduler,
+    AllFinalDeadlineAwareScheduler,
+    AllFinalScheduler,
+    EarlyExitEDFScheduler,
+    EarlyExitLQFScheduler,
+    NoBatchingScheduler,
+    SymphonyScheduler,
+    make_scheduler,
+)
+from repro.core.metrics import ServingMetrics, summarize
+from repro.core.profile import ProfileTable
+from repro.core.queues import QueueSnapshot, ServiceQueue
+from repro.core.request import Completion, Decision, Request, ServingTrace
+from repro.core.scheduler import (
+    EdgeServingScheduler,
+    Scheduler,
+    SchedulerConfig,
+    VectorizedEdgeServingScheduler,
+)
+from repro.core.simulator import ServingSimulator, SimResult, run_experiment
+from repro.core.traffic import paper_rate_vector, poisson_arrivals
+from repro.core.urgency import (
+    DEFAULT_CLIP,
+    candidate_stability_scores,
+    stability_score,
+    stability_score_np,
+    urgency,
+    urgency_np,
+)
+
+__all__ = [
+    "SCHEDULERS",
+    "AllEarlyScheduler",
+    "AllFinalDeadlineAwareScheduler",
+    "AllFinalScheduler",
+    "Completion",
+    "Decision",
+    "DEFAULT_CLIP",
+    "EarlyExitEDFScheduler",
+    "EarlyExitLQFScheduler",
+    "EdgeServingScheduler",
+    "NoBatchingScheduler",
+    "ProfileTable",
+    "QueueSnapshot",
+    "Request",
+    "Scheduler",
+    "SchedulerConfig",
+    "ServiceQueue",
+    "ServingMetrics",
+    "ServingSimulator",
+    "ServingTrace",
+    "SimResult",
+    "SymphonyScheduler",
+    "VectorizedEdgeServingScheduler",
+    "candidate_stability_scores",
+    "make_scheduler",
+    "paper_rate_vector",
+    "poisson_arrivals",
+    "run_experiment",
+    "stability_score",
+    "stability_score_np",
+    "summarize",
+    "urgency",
+    "urgency_np",
+]

@@ -1,0 +1,94 @@
+"""Serving metrics (paper Sec. VI): SLO violation ratio, tail latency,
+exit-depth distribution, and lookup-based effective accuracy."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.profile import ProfileTable
+from repro.core.request import Completion
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingMetrics:
+    """Aggregate results over a serving window (post-warmup completions)."""
+
+    num_completed: int
+    violation_ratio: float          # Eq. 2
+    p50_latency: float
+    p95_latency: float
+    p99_latency: float
+    mean_latency: float
+    mean_queueing: float
+    mean_exit_depth: float          # 1..E (paper Fig. 5)
+    mean_accuracy: float            # Table-I-lookup average (paper Sec. VI-C)
+    throughput: float               # completed req/s over the measured span
+    utilization: float              # accelerator busy fraction
+    mean_batch: float
+    residual_queue: int             # tasks still queued at the end (overload)
+    dropped: int = 0                # shed requests (Symphony); count as violations
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def summarize(
+    completions: Sequence[Completion],
+    table: ProfileTable,
+    slo: float,
+    warmup_tasks: int = 100,
+    busy_time: float = 0.0,
+    span: float = 0.0,
+    residual_queue: int = 0,
+    model_map: Optional[Sequence[int]] = None,
+    dropped: int = 0,
+) -> ServingMetrics:
+    """Aggregate a completion log.
+
+    Args:
+      completions: completion records ordered by finish time.
+      table:       profile table used for accuracy lookup.
+      slo:         deadline tau in seconds.
+      warmup_tasks: paper excludes the first 100 completed tasks.
+      busy_time:   accelerator-occupied seconds (for utilisation).
+      span:        wall-clock span of the experiment in seconds.
+      model_map:   optional mapping completion.model -> profile row (used by
+                   deployment-mix studies where queue i serves table row j).
+      dropped:     shed requests; counted as violations (a dropped request
+                   certainly misses its deadline).
+    """
+    done = list(completions)[warmup_tasks:]
+    if not done:
+        return ServingMetrics(0, 0.0, *([0.0] * 9), residual_queue, dropped)
+    lat = np.array([c.total_latency for c in done])
+    queue = np.array([c.queueing for c in done])
+    exits = np.array([c.exit_idx for c in done])
+    batches = np.array([c.batch_size for c in done])
+    rows = (
+        np.array([model_map[c.model] for c in done])
+        if model_map is not None
+        else np.array([c.model for c in done])
+    )
+    acc = table.accuracy[rows, exits]
+    if np.all(np.isnan(acc)):  # measured tables may carry no accuracy data
+        acc = np.zeros_like(acc)
+    late = int(np.sum(lat > slo))
+    return ServingMetrics(
+        num_completed=len(done),
+        violation_ratio=float((late + dropped) / (len(done) + dropped)),
+        p50_latency=float(np.percentile(lat, 50)),
+        p95_latency=float(np.percentile(lat, 95)),
+        p99_latency=float(np.percentile(lat, 99)),
+        mean_latency=float(lat.mean()),
+        mean_queueing=float(queue.mean()),
+        mean_exit_depth=float(exits.mean() + 1.0),
+        mean_accuracy=float(np.nanmean(acc)),
+        throughput=float(len(done) / span) if span > 0 else 0.0,
+        utilization=float(busy_time / span) if span > 0 else 0.0,
+        mean_batch=float(batches.mean()),
+        residual_queue=residual_queue,
+        dropped=dropped,
+    )

@@ -1,0 +1,103 @@
+"""FIFO service queues and the scheduler's snapshot view (paper Sec. III).
+
+Each model is backed by a dedicated FIFO queue. Requests arrive continuously
+and are enqueued regardless of accelerator state; the scheduler sees a
+*snapshot* of per-task queueing times at each scheduling round.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.request import Request
+
+
+class ServiceQueue:
+    """FIFO queue for one model; O(1) enqueue/dequeue, O(n) snapshot."""
+
+    __slots__ = ("model", "_q",)
+
+    def __init__(self, model: int):
+        self.model = model
+        self._q: deque = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def push(self, req: Request) -> None:
+        self._q.append(req)
+
+    def pop_batch(self, batch_size: int) -> List[Request]:
+        """Dequeue the ``batch_size`` oldest requests (FIFO)."""
+        n = min(batch_size, len(self._q))
+        return [self._q.popleft() for _ in range(n)]
+
+    def arrivals(self) -> np.ndarray:
+        """``[n]`` arrival times, oldest first."""
+        return np.fromiter(
+            (r.arrival for r in self._q), dtype=np.float64, count=len(self._q)
+        )
+
+    def waits(self, now: float) -> np.ndarray:
+        """``[n]`` queueing times at ``now``, oldest (largest wait) first."""
+        return now - self.arrivals()
+
+    def peek_oldest(self) -> Optional[Request]:
+        return self._q[0] if self._q else None
+
+
+class QueueSnapshot:
+    """Immutable per-round view consumed by schedulers.
+
+    Attributes:
+      now:    snapshot wall-clock time (seconds).
+      waits:  list of M float64 arrays, FIFO order (index 0 = oldest task,
+              i.e. the maximum queueing time ``w_max`` of that queue).
+    """
+
+    __slots__ = ("now", "waits")
+
+    def __init__(self, now: float, waits: Sequence[np.ndarray]):
+        self.now = now
+        self.waits = list(waits)
+
+    @property
+    def num_models(self) -> int:
+        return len(self.waits)
+
+    def qlen(self, m: int) -> int:
+        return len(self.waits[m])
+
+    def qlens(self) -> List[int]:
+        return [len(w) for w in self.waits]
+
+    def w_max(self, m: int) -> float:
+        return float(self.waits[m][0]) if len(self.waits[m]) else 0.0
+
+    def nonempty(self) -> List[int]:
+        return [m for m, w in enumerate(self.waits) if len(w)]
+
+    def total_tasks(self) -> int:
+        return sum(len(w) for w in self.waits)
+
+    def padded(
+        self, max_q: Optional[int] = None, dtype=np.float64
+    ) -> "tuple[np.ndarray, np.ndarray]":
+        """Padded ``([M, maxQ] waits, [M, maxQ] mask)`` for vectorised scoring."""
+        m_count = len(self.waits)
+        cap = max_q or max((len(w) for w in self.waits), default=0)
+        cap = max(cap, 1)
+        w = np.zeros((m_count, cap), dtype=dtype)
+        mask = np.zeros((m_count, cap), dtype=dtype)
+        for m, wq in enumerate(self.waits):
+            n = min(len(wq), cap)
+            w[m, :n] = wq[:n]
+            mask[m, :n] = 1.0
+        return w, mask
+
+    @staticmethod
+    def take(queues: Iterable[ServiceQueue], now: float) -> "QueueSnapshot":
+        return QueueSnapshot(now, [q.waits(now) for q in queues])

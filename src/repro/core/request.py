@@ -1,0 +1,92 @@
+"""Request / decision / completion record types for the EdgeServing core.
+
+These are deliberately tiny, allocation-cheap host-side records: the online
+scheduler runs on the host between accelerator quanta, so every byte and
+branch here is on the serving critical path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(slots=True)
+class Request:
+    """A single inference request enqueued to a model's service queue.
+
+    Attributes:
+      req_id:    globally unique, monotone id (also used as FIFO tiebreak).
+      model:     index of the target model queue in ``[0, M)``.
+      arrival:   arrival wall-clock time in seconds.
+      data_id:   opaque payload index (e.g. CIFAR test index / prompt id).
+    """
+
+    req_id: int
+    model: int
+    arrival: float
+    data_id: int = 0
+
+
+@dataclasses.dataclass(slots=True)
+class Decision:
+    """A scheduling decision ``(m*, e*, B*)`` (paper Eq. 5-7).
+
+    Attributes:
+      model:      selected model queue ``m*``.
+      exit_idx:   selected early-exit point ``e*`` as an index into the
+                  model's exit list (0 = shallowest, E-1 = final).
+      batch_size: selected batch size ``B*`` (number of requests dequeued).
+      predicted_latency: profile-table latency ``L(m*, e*, B*)`` in seconds.
+      stability_score:   predicted system stability score ``S_{m*}`` under
+                  this decision (lower = more stable); NaN for schedulers
+                  that do not compute one.
+    """
+
+    model: int
+    exit_idx: int
+    batch_size: int
+    predicted_latency: float
+    stability_score: float = float("nan")
+
+
+@dataclasses.dataclass(slots=True)
+class Completion:
+    """A completed request with its end-to-end accounting.
+
+    ``total_latency = queueing + service`` (paper Eq. 1):
+    ``T_i = w_i + t_i``.
+    """
+
+    req_id: int
+    model: int
+    arrival: float
+    dispatch: float
+    finish: float
+    exit_idx: int
+    batch_size: int
+
+    @property
+    def queueing(self) -> float:
+        return self.dispatch - self.arrival
+
+    @property
+    def service(self) -> float:
+        return self.finish - self.dispatch
+
+    @property
+    def total_latency(self) -> float:
+        return self.finish - self.arrival
+
+    def violates(self, slo: float) -> bool:
+        return self.total_latency > slo
+
+
+@dataclasses.dataclass(slots=True)
+class ServingTrace:
+    """One dispatched accelerator quantum (for timelines / debugging)."""
+
+    t_start: float
+    t_end: float
+    decision: Decision
+    queue_lengths: Optional[tuple] = None

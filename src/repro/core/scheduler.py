@@ -1,0 +1,189 @@
+"""The EdgeServing online scheduler (paper Sec. V, Algorithm 1).
+
+One-step-greedy deadline-aware scheduling: per non-empty queue, pick
+``B* = min(|Q_m|, B_max)`` (Eq. 5) and the deepest SLO-feasible exit
+``e*`` (Eq. 6); predict the post-decision queue state (all other tasks wait
+``L(m, e*, B*)`` longer); score it with the stability score (Eq. 4); and
+serve the candidate minimising the predicted score (Eq. 7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.profile import ProfileTable
+from repro.core.queues import QueueSnapshot
+from repro.core.request import Decision
+from repro.core.urgency import DEFAULT_CLIP, urgency_np
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Shared knobs for all scheduling policies.
+
+    Attributes:
+      slo:        per-request latency deadline tau (seconds).
+      max_batch:  B_max (paper default: 10).
+      clip:       urgency clip C (paper example: 10).
+      allowed_exits: optional subset of exit indices the scheduler may use
+                  (paper Fig. 7 exit-configuration study); None = all.
+    """
+
+    slo: float = 0.050
+    max_batch: int = 10
+    clip: float = DEFAULT_CLIP
+    allowed_exits: Optional[Tuple[int, ...]] = None
+
+
+class Scheduler:
+    """Base class: a policy maps a queue snapshot to a Decision."""
+
+    name = "base"
+
+    def __init__(self, table: ProfileTable, config: SchedulerConfig):
+        self.table = table
+        self.config = config
+        exits = config.allowed_exits or tuple(range(table.num_exits))
+        # Deduplicate + sort shallow->deep once; Eq. 6 scans deep->shallow.
+        self._exits = tuple(sorted(set(exits)))
+        assert self._exits, "at least one exit point must be allowed"
+        assert all(0 <= e < table.num_exits for e in self._exits)
+
+    # -- shared sub-procedures (Eq. 5 / Eq. 6) -------------------------------
+
+    def batch_size(self, qlen: int) -> int:
+        """Eq. 5: B* = min(|Q_m|, B_max)."""
+        return min(qlen, self.config.max_batch)
+
+    def select_exit(self, m: int, w_max: float, batch: int) -> Tuple[int, float]:
+        """Eq. 6: deepest allowed exit with ``w_max + L(m,e,B) <= tau``.
+
+        Falls back to the *shallowest* allowed exit when no exit is feasible
+        (the task will violate regardless; minimising service time minimises
+        collateral damage to other queues — paper Sec. VI-D shows the fast
+        fallback exit is what sustains SLO compliance).
+
+        Returns: (exit_idx, L(m, exit_idx, batch)).
+        """
+        tau = self.config.slo
+        for e in reversed(self._exits):
+            lat = self.table(m, e, batch)
+            if w_max + lat <= tau:
+                return e, lat
+        e0 = self._exits[0]
+        return e0, self.table(m, e0, batch)
+
+    def candidate(self, snapshot: QueueSnapshot, m: int) -> Tuple[int, int, float]:
+        """(B*, e*, L) for queue ``m`` under Eq. 5 + Eq. 6."""
+        batch = self.batch_size(snapshot.qlen(m))
+        exit_idx, lat = self.select_exit(m, snapshot.w_max(m), batch)
+        return batch, exit_idx, lat
+
+    # -- policy ---------------------------------------------------------------
+
+    def decide(self, snapshot: QueueSnapshot) -> Optional[Decision]:
+        """Return the decision for this round, or None if all queues empty."""
+        raise NotImplementedError
+
+    def prune(self, snapshot: QueueSnapshot) -> "list[tuple[int, int]]":
+        """Optional admission control: ``[(model, n_oldest_to_drop), ...]``.
+
+        EdgeServing never rejects requests (late tasks still run and count
+        as violations); Symphony sheds expired requests under overload.
+        """
+        return []
+
+
+class EdgeServingScheduler(Scheduler):
+    """Algorithm 1: stability-score deadline-aware model selection."""
+
+    name = "edgeserving"
+
+    def decide(self, snapshot: QueueSnapshot) -> Optional[Decision]:
+        nonempty = snapshot.nonempty()
+        if not nonempty:
+            return None
+        tau, clip = self.config.slo, self.config.clip
+
+        # Urgency is additive across queues, so precompute per-queue wait
+        # arrays once; each candidate shifts *all* surviving tasks by L_m.
+        best: Optional[Decision] = None
+        for m in nonempty:
+            batch, exit_idx, lat = self.candidate(snapshot, m)
+            # Queue status prediction (Sec. V-C): served tasks removed; all
+            # remaining tasks in every queue wait lat longer.
+            score = 0.0
+            for m2 in nonempty:
+                w = snapshot.waits[m2]
+                if m2 == m:
+                    w = w[batch:]  # FIFO: the batch oldest tasks are served
+                if len(w):
+                    score += float(urgency_np(w + lat, tau, clip).sum())
+            if (
+                best is None
+                or score < best.stability_score
+                or (
+                    score == best.stability_score
+                    and snapshot.w_max(m) > snapshot.w_max(best.model)
+                )
+            ):
+                best = Decision(
+                    model=m,
+                    exit_idx=exit_idx,
+                    batch_size=batch,
+                    predicted_latency=lat,
+                    stability_score=score,
+                )
+        return best
+
+
+class VectorizedEdgeServingScheduler(Scheduler):
+    """Numerically identical to EdgeServingScheduler, NumPy-vectorised.
+
+    Beyond-paper engineering: one O(M^2 * maxQ) padded-matrix evaluation per
+    round instead of Python loops; this is also the reference for the
+    jnp/Pallas scoring kernels (see repro.kernels.stability_score).
+    """
+
+    name = "edgeserving-vec"
+
+    def decide(self, snapshot: QueueSnapshot) -> Optional[Decision]:
+        nonempty = snapshot.nonempty()
+        if not nonempty:
+            return None
+        tau, clip = self.config.slo, self.config.clip
+        w, mask = snapshot.padded()
+        m_count, max_q = w.shape
+
+        batches = np.zeros(m_count, dtype=np.int64)
+        exits = np.zeros(m_count, dtype=np.int64)
+        lats = np.zeros(m_count, dtype=np.float64)
+        for m in nonempty:
+            batches[m], exits[m], lats[m] = self.candidate(snapshot, m)
+
+        shifted = w[None, :, :] + lats[:, None, None]
+        urg = np.minimum(
+            np.exp(np.minimum(shifted / tau - 1.0, np.log(clip))), clip
+        ) * mask[None, :, :]
+        total = urg.sum(axis=(1, 2))
+        pos = np.arange(max_q)[None, :]
+        served = (pos < batches[:, None]).astype(np.float32)
+        own = urg[np.arange(m_count), np.arange(m_count), :]
+        scores = total - (own * served).sum(axis=1)
+
+        ne = np.array(nonempty)
+        w_maxes = np.array([snapshot.w_max(m) for m in nonempty])
+        cand_scores = scores[ne]
+        # argmin with w_max tiebreak (serve the more urgent queue on ties)
+        order = np.lexsort((-w_maxes, cand_scores))
+        m_star = int(ne[order[0]])
+        return Decision(
+            model=m_star,
+            exit_idx=int(exits[m_star]),
+            batch_size=int(batches[m_star]),
+            predicted_latency=float(lats[m_star]),
+            stability_score=float(scores[m_star]),
+        )

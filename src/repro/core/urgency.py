@@ -1,0 +1,125 @@
+"""Urgency activation and stability score (paper Eq. 3-4).
+
+The urgency of a queued task with queueing time ``w`` under SLO deadline
+``tau`` is
+
+    f(w) = min(exp(w / tau - 1), C)                                (Eq. 3)
+
+-- exponential because remaining slack shrinks super-linearly as ``w``
+approaches ``tau``; normalised so that ``f(tau) = 1`` for any SLO; clipped
+at ``C`` so tasks already far beyond the deadline (``w > tau (1 + ln C)``)
+cannot dominate and starve the remaining queues.
+
+The *stability score* of the whole system is the sum of urgencies over all
+queued tasks of all models:
+
+    S = sum_m sum_{i in Q_m} f(w_{m,i})                            (Eq. 4)
+
+Both a NumPy (host scheduler hot path) and a jnp (vectorised / jit-able)
+implementation are provided; `repro.kernels.stability_score` provides the
+fused Pallas version used when scoring many candidates at once.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# Paper: "tasks already far beyond the SLO (e.g. w > tau(1+ln 10) ~ 3.3 tau)"
+# => the running example uses C = 10.
+DEFAULT_CLIP = 10.0
+
+
+# ---------------------------------------------------------------------------
+# NumPy host path (used inside the per-round scheduler loop)
+# ---------------------------------------------------------------------------
+
+def urgency_np(w: np.ndarray, tau: float, clip: float = DEFAULT_CLIP) -> np.ndarray:
+    """Eq. 3 on a NumPy array of queueing times (seconds).
+
+    Implemented as exp(min(w/tau - 1, ln C)) == min(exp(w/tau - 1), C) to
+    stay overflow-free for arbitrarily late tasks.
+    """
+    return np.minimum(np.exp(np.minimum(w / tau - 1.0, np.log(clip))), clip)
+
+
+def stability_score_np(
+    waits: "list[np.ndarray]", tau: float, clip: float = DEFAULT_CLIP
+) -> float:
+    """Eq. 4 over a list of per-queue queueing-time arrays."""
+    total = 0.0
+    for w in waits:
+        if len(w):
+            total += float(urgency_np(np.asarray(w, dtype=np.float64), tau, clip).sum())
+    return total
+
+
+# ---------------------------------------------------------------------------
+# jnp path (jit-able; used by the vectorised scheduler and as the oracle for
+# the Pallas stability_score kernel)
+# ---------------------------------------------------------------------------
+
+def urgency(w: jax.Array, tau: float, clip: float = DEFAULT_CLIP) -> jax.Array:
+    """Eq. 3 as a jnp expression (supports batching/vmap/jit).
+
+    exp(min(., ln C)) form: overflow-free for arbitrarily late tasks.
+    """
+    return jnp.minimum(jnp.exp(jnp.minimum(w / tau - 1.0, jnp.log(clip))), clip)
+
+
+def stability_score(
+    w: jax.Array, mask: jax.Array, tau: float, clip: float = DEFAULT_CLIP
+) -> jax.Array:
+    """Eq. 4 over a padded ``[M, maxQ]`` wait matrix with validity mask.
+
+    Args:
+      w:    ``[M, maxQ]`` queueing times, arbitrary values at padded slots.
+      mask: ``[M, maxQ]`` 1.0 for real tasks, 0.0 for padding.
+    Returns: scalar stability score.
+    """
+    return jnp.sum(urgency(w, tau, clip) * mask)
+
+
+def candidate_stability_scores(
+    w: jax.Array,
+    mask: jax.Array,
+    cand_latency: jax.Array,
+    cand_batch: jax.Array,
+    tau: float,
+    clip: float = DEFAULT_CLIP,
+) -> jax.Array:
+    """Score every candidate model choice in one shot (vectorised Eq. 4-7).
+
+    Under candidate ``m`` the scheduler hypothetically serves the ``B_m``
+    oldest tasks of queue ``m`` for ``L_m = L(m, e*_m, B*_m)`` seconds.
+    Prediction (paper Sec. V-C "Queue Status Prediction"):
+      * served tasks are removed;
+      * every other task (same queue beyond ``B_m``, and all other queues)
+        has its queueing time extended by ``L_m``.
+
+    Args:
+      w:            ``[M, maxQ]`` FIFO-sorted (oldest first) wait matrix.
+      mask:         ``[M, maxQ]`` validity mask.
+      cand_latency: ``[M]`` per-candidate profiled latency ``L_m``.
+      cand_batch:   ``[M]`` per-candidate batch size ``B_m`` (int).
+    Returns:
+      ``[M]`` stability score ``S_m`` for each candidate. Candidates with
+      empty queues still get a (meaningless) score; callers mask them.
+    """
+    m_count, max_q = w.shape
+    pos = jnp.arange(max_q)[None, :]                      # [1, maxQ]
+    served = pos < cand_batch[:, None]                    # [M, maxQ] rows=candidate
+
+    # f(w + L_m) for all tasks, per candidate: [M(cand), M(queue), maxQ]
+    shifted = w[None, :, :] + cand_latency[:, None, None]
+    urg = jnp.minimum(
+        jnp.exp(jnp.minimum(shifted / tau - 1.0, jnp.log(clip))), clip
+    ) * mask[None, :, :]
+
+    total = jnp.sum(urg, axis=(1, 2))                     # [M] sum over everything
+    # subtract the served (removed) tasks of the candidate's own queue
+    own = urg[jnp.arange(m_count), jnp.arange(m_count), :]  # [M, maxQ]
+    removed = jnp.sum(own * served * mask, axis=1)        # [M]
+    return total - removed

@@ -1,0 +1,11 @@
+from repro.data.pipeline import (
+    cifar100_like,
+    synthetic_lm_batches,
+    synthetic_memorization_corpus,
+)
+
+__all__ = [
+    "cifar100_like",
+    "synthetic_lm_batches",
+    "synthetic_memorization_corpus",
+]

@@ -1,0 +1,73 @@
+"""Distributed-optimization collectives.
+
+``compressed_psum``: int8-quantised gradient all-reduce with error feedback
+— an O(4x) reduction of the gradient all-reduce volume for DP/FSDP training
+at 1000+ node scale, where the cross-pod (DCI) links are the binding
+constraint. Used by the trainer when ``compress_grads=True``: gradients are
+quantised per-tensor with a shared scale, summed in int32, dequantised, and
+the quantisation error is fed back into the next step's gradients (error
+feedback keeps SGD convergence unbiased to first order).
+
+These helpers are written against ``shard_map`` semantics (explicit mesh
+axes); under plain pjit the trainer uses them through
+``quantize_tree``/``dequantize_tree`` around the optimizer boundary.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantisation. Returns (q, scale)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-compressed psum over a mesh axis (inside shard_map).
+
+    The int8 payload is psum-ed in int32 (no overflow for <= 2^23 workers);
+    scales are max-reduced so dequantisation is conservative.
+    """
+    q, scale = quantize_int8(x)
+    q_sum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    scale_max = jax.lax.pmax(scale, axis_name)
+    return dequantize_int8(q_sum, scale_max).astype(x.dtype)
+
+
+def quantize_tree(grads: PyTree, error: Optional[PyTree]) -> Tuple[PyTree, PyTree, PyTree]:
+    """Error-feedback quantisation of a gradient tree.
+
+    Returns (quantised-dequantised grads, scales, new error residuals).
+    The trainer adds ``error`` (previous residual) before quantising, then
+    keeps the new residual for the next step.
+    """
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g32)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), scale, g32 - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    deq = treedef.unflatten([o[0] for o in outs])
+    scales = treedef.unflatten([o[1] for o in outs])
+    residual = treedef.unflatten([o[2] for o in outs])
+    return deq, scales, residual

@@ -1,0 +1,241 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / FSDP / TP / EP / SP + pod).
+
+Every parameter carries logical axis names (see repro.models.common.Param);
+these rules map them to mesh axes and build NamedSharding trees for jit's
+in_shardings/out_shardings. Divisibility is sanitised: a mesh axis that does
+not evenly divide the corresponding array dim is dropped from the spec
+(replicating that dim) instead of failing — e.g. seamless' 256,206-row
+vocab is not 16-divisible, starcoder2's 36 heads reshape unevenly.
+
+Rule presets:
+  * train_rules: Megatron-style TP over "model" (heads/mlp/expert/vocab) +
+    FSDP over ("pod","data") for the remaining large dims ("embed") —
+    ZeRO-3-equivalent: optimizer states inherit param specs.
+  * serve_rules: TP only; params replicated across "data"/"pod" (each data
+    shard serves its own requests); KV caches sharded batch->data,
+    sequence->model (flash-decode style sequence parallelism).
+  * serve_rules_ep_wide: beyond-paper §Perf variant — experts sharded over
+    ("data","model") (e.g. 256-way EP for deepseek-v3), tokens replicated
+    across "data" during expert compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping from logical axis names to mesh axes."""
+
+    rules: "dict[str, AxisVal]"
+    # Activation conventions (used by batch/cache spec builders).
+    batch_axes: AxisVal = ("data",)
+    seq_axes: AxisVal = None       # sequence-parallel axis for caches
+    name: str = "custom"
+
+    def axis_for(self, logical: Optional[str]) -> AxisVal:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+
+def train_rules(multi_pod: bool = False, fsdp: bool = True) -> ShardingRules:
+    dp: Tuple[str, ...] = ("pod", "data") if multi_pod else ("data",)
+    return ShardingRules(
+        rules={
+            "vocab": "model",
+            "embed": dp if fsdp else None,
+            "heads": "model",
+            "mlp": "model",
+            "expert": "model",
+            "embed_out": None,
+            "layers": None,
+        },
+        batch_axes=dp,
+        seq_axes=None,
+        name=("train-fsdp" if fsdp else "train-dp")
+        + ("-multipod" if multi_pod else ""),
+    )
+
+
+def train_rules_pure_dp(multi_pod: bool = False) -> ShardingRules:
+    """§Perf variant for small models whose head counts defeat 16-way TP
+    (e.g. smollm's 9 heads): classic data parallelism — params fully
+    replicated (135M fp32 = 0.5 GB, fits every chip), batch sharded over
+    BOTH mesh axes (256/512-way DP). Every chip computes distinct
+    sequences; no replicated attention, and — critically — the embedding
+    gather stays trivially batch-sharded (an FSDP-sharded table makes the
+    gather unpartitionable: XLA's "involuntary full rematerialization"
+    replicates the activations and the whole forward loses its batch
+    sharding — measured in §Perf Cell D)."""
+    dp: Tuple[str, ...] = (("pod", "data", "model") if multi_pod
+                           else ("data", "model"))
+    return ShardingRules(
+        rules={
+            "vocab": None,
+            "embed": None,
+            "heads": None,
+            "mlp": None,
+            "expert": None,
+            "embed_out": None,
+            "layers": None,
+        },
+        batch_axes=dp,
+        seq_axes=None,
+        name="train-pure-dp" + ("-multipod" if multi_pod else ""),
+    )
+
+
+def serve_rules(multi_pod: bool = False) -> ShardingRules:
+    dp: Tuple[str, ...] = ("pod", "data") if multi_pod else ("data",)
+    return ShardingRules(
+        rules={
+            "vocab": "model",
+            "embed": None,          # replicated: every data shard serves alone
+            "heads": "model",
+            "mlp": "model",
+            "expert": "model",
+            "embed_out": None,
+            "layers": None,
+        },
+        batch_axes=dp,
+        seq_axes="model",           # KV cache sequence-sharding (flash-decode)
+        name="serve" + ("-multipod" if multi_pod else ""),
+    )
+
+
+def serve_rules_ep_wide(multi_pod: bool = False) -> ShardingRules:
+    """Beyond-paper serving layout for huge MoE: experts sharded over the
+    full chip count (EP = data x model) and non-expert params FSDP-sharded
+    over "data" — the layout that brings deepseek-v3 weights under v5e HBM
+    (see EXPERIMENTS.md §Perf)."""
+    base = serve_rules(multi_pod)
+    return dataclasses.replace(
+        base,
+        rules={**base.rules, "expert": ("data", "model"), "embed": "data"},
+        name="serve-ep-wide" + ("-multipod" if multi_pod else ""),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Spec construction + sanitisation
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh: Mesh, ax: AxisVal) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        return mesh.shape[ax]
+    return int(np.prod([mesh.shape[a] for a in ax]))
+
+
+def sanitize_spec(shape: Sequence[int], spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes that don't divide the dim (replicate instead),
+    and drop axes that appear more than once across dims."""
+    used: set = set()
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        keep = []
+        size = 1
+        for a in axes:
+            if a in used:
+                continue
+            s = mesh.shape[a]
+            if dim % (size * s) == 0:
+                keep.append(a)
+                size *= s
+        used.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    return P(*out)
+
+
+def spec_for_param(shape: Sequence[int], axes: Tuple[Optional[str], ...],
+                   rules: ShardingRules, mesh: Mesh) -> P:
+    spec = P(*[rules.axis_for(a) for a in axes])
+    return sanitize_spec(shape, spec, mesh)
+
+
+def param_shardings(shapes_tree, axes_tree, rules: ShardingRules, mesh: Mesh):
+    """NamedSharding tree matching a ShapeDtypeStruct (or array) tree."""
+
+    def one(s, a):
+        return NamedSharding(mesh, spec_for_param(s.shape, a, rules, mesh))
+
+    return jax.tree.map(one, shapes_tree, axes_tree)
+
+
+# -- activation / input specs -------------------------------------------------
+
+def batch_shardings(batch_tree, rules: ShardingRules, mesh: Mesh):
+    """Shard every batch input along its leading (batch) dim."""
+
+    def one(s):
+        spec = P(rules.batch_axes, *([None] * (len(s.shape) - 1)))
+        return NamedSharding(mesh, sanitize_spec(s.shape, spec, mesh))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def _cache_leaf_spec(path_str: str, shape, rules: ShardingRules) -> P:
+    """Spec for one KV-cache / state leaf by naming convention.
+
+    Stacked cache layouts (leading ``layers`` axis):
+      k/v:    [L, B, S, K, Dh]   -> (None, batch, seq, None, None)
+      c_kv:   [L, B, S, dc]      -> (None, batch, seq, None)   (MLA latent)
+      k_pe:   [L, B, S, r]       -> (None, batch, seq, None)
+      len:    [L, B]             -> (None, batch)
+      wkv:    [L, B, H, N, N]    -> (None, batch, model, None, None)
+      shift:  [L, B, D]          -> (None, batch, None)
+      h:      [L, B, Di, N]      -> (None, batch, model, None)  (mamba)
+      conv:   [L, B, K-1, Di]    -> (None, batch, None, None)
+    """
+    nd = len(shape)
+    b = rules.batch_axes
+    s = rules.seq_axes
+    leaf = path_str.rsplit("/", 1)[-1]
+    if leaf in ("k", "v") and nd == 5:
+        return P(None, b, s, None, None)
+    if leaf in ("c_kv", "k_pe") and nd == 4:
+        return P(None, b, s, None)
+    if leaf == "len":
+        return P(*([None] * (nd - 1) + [b])) if nd == 1 else P(None, b)
+    if leaf == "wkv" and nd == 5:
+        return P(None, b, "model", None, None)
+    if leaf == "h" and nd == 4:
+        return P(None, b, "model", None)
+    if leaf in ("shift", "conv"):
+        return P(None, b, *([None] * (nd - 2)))
+    # fallback: batch on dim 1 (after layers)
+    return P(None, b, *([None] * (nd - 2))) if nd >= 2 else P(None)
+
+
+def cache_shardings(cache_tree, rules: ShardingRules, mesh: Mesh):
+    def one(path, s):
+        path_str = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        spec = _cache_leaf_spec(path_str, s.shape, rules)
+        return NamedSharding(mesh, sanitize_spec(s.shape, spec, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

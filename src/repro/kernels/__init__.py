@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the serving hot spots.
+
+Each kernel package has three modules:
+  kernel.py — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (shape plumbing, interpret switch)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels are validated with ``interpret=True`` on CPU (the container has no
+TPU); the model forward paths use the jnp reference implementations so the
+dry-run HLO stays analyzable, and real-TPU deployments flip
+``use_flash_kernel`` (see DESIGN.md §6).
+"""

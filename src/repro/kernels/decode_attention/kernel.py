@@ -1,0 +1,104 @@
+"""Single-token KV-cache attention (decode) as a Pallas TPU kernel.
+
+Decode attention is HBM-bandwidth-bound: each step streams the whole KV
+cache once and does O(S*D) FLOPs on it. The kernel splits the cache
+sequence into blocks (split-K), carries online-softmax partials in VMEM
+scratch across the sequential kv grid dimension, and masks the invalid
+cache tail with the per-row ``lengths``.
+
+Tiling: grid = (B, H, S/bs); blocks k/v [bs, D] (bs=512 default), the
+single query row [1, D] stays resident. The q row is broadcast against the
+kv block on the MXU via a [1, D] x [D, bs] dot.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, bs: int):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0]
+
+    # skip blocks entirely beyond the valid prefix
+    @pl.when(ik * bs < length)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)            # [1, D]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bs, D]
+        v = v_ref[0, 0].astype(jnp.float32)            # [bs, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [1, bs]
+        pos = ik * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                          # [1, bs]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)         # [1, D]
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(
+    q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
+    *, block_s: int = 512, interpret: bool = False,
+) -> jax.Array:
+    """q [B, H, D]; k, v [B, K, S, D]; lengths [B] int32 -> [B, H, D]."""
+    b, h, d = q.shape
+    kh, s = k.shape[1], k.shape[2]
+    group = h // kh
+    bs = min(block_s, s)
+    assert s % bs == 0, (s, bs)
+    grid = (b, h, s // bs)
+    scale = 1.0 / (d ** 0.5)
+
+    q4 = q[:, :, None, :]                               # [B, H, 1, D]
+    kernel = functools.partial(_decode_kernel, scale=scale, bs=bs)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_, ik: (b_,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ik: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h_, ik, g=group: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h_, ik, g=group: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ik: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, q4, k, v)
+    return out[:, :, 0, :]

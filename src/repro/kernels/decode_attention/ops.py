@@ -1,0 +1,22 @@
+"""Public wrapper for the decode-attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret",
+                                             "use_kernel"))
+def decode_attention(q, k, v, lengths, *, block_s: int = 512,
+                     interpret: bool = False, use_kernel: bool = True):
+    """One-token KV-cache attention. q [B, H, D]; k, v [B, K, S, D];
+    lengths [B]. ``use_kernel=False`` -> jnp oracle."""
+    if not use_kernel:
+        return decode_attention_ref(q, k, v, lengths)
+    return decode_attention_kernel(q, k, v, lengths, block_s=block_s,
+                                   interpret=interpret)

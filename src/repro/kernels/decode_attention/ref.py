@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token KV-cache (decode) attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths) -> jax.Array:
+    """q [B, H, D]; k, v [B, K, S, D]; lengths [B] valid cache prefix.
+
+    Returns [B, H, D] in q.dtype (fp32 softmax accumulation).
+    """
+    b, h, d = q.shape
+    kh, s = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, kh, g, d)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg, k).astype(jnp.float32)
+    scores *= 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    valid = jnp.arange(s)[None, :] < lengths[:, None]          # [B, S]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bksd->bkgd", probs, v)
+    return out.reshape(b, h, d)

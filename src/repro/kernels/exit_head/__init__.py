@@ -1,0 +1,3 @@
+from repro.kernels.exit_head.ops import exit_head
+
+__all__ = ["exit_head"]

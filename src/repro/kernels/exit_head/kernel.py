@@ -1,0 +1,104 @@
+"""Fused exit head as a Pallas TPU kernel.
+
+Every scheduler-controlled early exit runs norm + LM-head + confidence.
+Materialising [T, V] logits (V up to 200k) costs a round trip to HBM that
+dwarfs the decision itself; this kernel streams the vocab dimension in
+VMEM-resident tiles and keeps only O(T) running statistics:
+
+  grid = (T/bt, V/bv), sequential in the vocab dimension;
+  blocks: h [bt, D] (revisited each vocab step), W [D, bv];
+  scratch: running max / argmax / logsumexp accumulators [bt].
+
+RMSNorm is fused: recomputed per vocab tile from the VMEM-resident h block
+(cheaper than a second pass or an extra scratch buffer of normed h).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _exit_head_kernel(h_ref, g_ref, w_ref, idx_ref, mx_ref, lse_ref,
+                      m_ref, a_ref, l_ref, *, bt: int, bv: int, eps: float):
+    iv = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(iv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        a_ref[...] = jnp.zeros_like(a_ref)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    h = h_ref[...].astype(jnp.float32)                  # [bt, D]
+    g = g_ref[...].astype(jnp.float32)                  # [D]
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    normed = h * jax.lax.rsqrt(var + eps) * g[None, :]
+    w = w_ref[...].astype(jnp.float32)                  # [D, bv]
+    logits = jax.lax.dot_general(
+        normed, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)             # [bt, bv]
+
+    blk_max = jnp.max(logits, axis=1)                   # [bt]
+    blk_arg = iv * bv + jnp.argmax(logits, axis=1).astype(jnp.int32)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, blk_max)
+    # running logsumexp
+    l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) + jnp.sum(
+        jnp.exp(logits - m_new[:, None]), axis=1)
+    # running argmax (strictly-greater keeps the first occurrence, matching
+    # jnp.argmax tie semantics across ordered blocks)
+    take = blk_max > m_prev
+    a_ref[...] = jnp.where(take, blk_arg, a_ref[...])
+    m_ref[...] = m_new
+
+    @pl.when(iv == nv - 1)
+    def _finish():
+        idx_ref[...] = a_ref[...]
+        mx_ref[...] = m_ref[...]
+        lse_ref[...] = m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
+
+
+def exit_head_kernel(h, gain, w, *, block_t: int = 256, block_v: int = 1024,
+                     eps: float = 1e-6, interpret: bool = False):
+    """h [T, D]; gain [D]; w [D, V] -> (argmax [T], max [T], lse [T])."""
+    t, d = h.shape
+    v = w.shape[1]
+    bt = min(block_t, t)
+    bv = min(block_v, v)
+    assert t % bt == 0 and v % bv == 0, (t, bt, v, bv)
+    grid = (t // bt, v // bv)
+
+    kernel = functools.partial(_exit_head_kernel, bt=bt, bv=bv, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda it, iv: (it, 0)),
+            pl.BlockSpec((d,), lambda it, iv: (0,)),
+            pl.BlockSpec((d, bv), lambda it, iv: (0, iv)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda it, iv: (it,)),
+            pl.BlockSpec((bt,), lambda it, iv: (it,)),
+            pl.BlockSpec((bt,), lambda it, iv: (it,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bt,), jnp.float32),   # running max
+            pltpu.VMEM((bt,), jnp.int32),     # running argmax
+            pltpu.VMEM((bt,), jnp.float32),   # running sumexp
+        ],
+        interpret=interpret,
+    )(h, gain, w)

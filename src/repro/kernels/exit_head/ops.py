@@ -1,0 +1,29 @@
+"""Public wrapper for the fused exit head."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.exit_head.kernel import exit_head_kernel
+from repro.kernels.exit_head.ref import confidence_from, exit_head_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v", "eps",
+                                             "interpret", "use_kernel"))
+def exit_head(h, gain, w, *, block_t: int = 256, block_v: int = 1024,
+              eps: float = 1e-6, interpret: bool = False,
+              use_kernel: bool = True):
+    """Fused rmsnorm + unembedding + top-1/confidence.
+
+    h [T, D]; gain [D]; w [D, V] -> (argmax [T] i32, max [T] f32, lse [T]).
+    ``confidence = exp(max - lse)``.
+    """
+    if not use_kernel:
+        return exit_head_ref(h, gain, w, eps=eps)
+    return exit_head_kernel(h, gain, w, block_t=block_t, block_v=block_v,
+                            eps=eps, interpret=interpret)
+
+
+__all__ = ["exit_head", "confidence_from"]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused exit head.
+
+exit_head(h, g, W) = (argmax, max_logit, logsumexp) of
+``rmsnorm(h; g) @ W`` — everything the early-exit decision needs (top-1
+prediction + softmax confidence = exp(max - lse)) without materialising the
+[T, V] logits in HBM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def exit_head_ref(h, gain, w, eps: float = 1e-6):
+    """h [T, D]; gain [D]; w [D, V] ->
+    (argmax [T] int32, max_logit [T] f32, lse [T] f32)."""
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    normed = hf * jax.lax.rsqrt(var + eps) * gain.astype(jnp.float32)
+    logits = normed @ w.astype(jnp.float32)             # [T, V]
+    return (
+        jnp.argmax(logits, axis=-1).astype(jnp.int32),
+        jnp.max(logits, axis=-1),
+        jax.nn.logsumexp(logits, axis=-1),
+    )
+
+
+def confidence_from(max_logit, lse):
+    """Top-1 softmax probability (the paper-style exit confidence)."""
+    return jnp.exp(max_logit - lse)

@@ -1,0 +1,25 @@
+"""Public wrapper for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret", "use_kernel"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 512, interpret: bool = False,
+                    use_kernel: bool = True):
+    """Causal GQA attention, heads-first layout ([B, H, S, D] /
+    [B, K, S, D]). ``use_kernel=False`` falls back to the jnp oracle
+    (the CPU/dry-run path)."""
+    if not use_kernel:
+        return flash_attention_ref(q, k, v, causal=causal)
+    return flash_attention_kernel(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal: bool = True) -> jax.Array:
+    """q [B, H, S, D]; k, v [B, K, S, D] with H % K == 0. fp32 softmax.
+
+    Returns [B, H, S, D] in q.dtype.
+    """
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    g = h // kh
+    qg = q.reshape(b, kh, g, s, d)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qg, k).astype(jnp.float32)
+    scores *= 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, v)
+    return out.reshape(b, h, s, d)

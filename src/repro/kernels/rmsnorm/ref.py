@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for RMSNorm — re-exports the model substrate's
+implementation so the kernel validates against exactly what models use."""
+
+from repro.models.common import rms_norm as rmsnorm_ref
+
+__all__ = ["rmsnorm_ref"]

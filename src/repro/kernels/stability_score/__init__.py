@@ -1,0 +1,3 @@
+from repro.kernels.stability_score.ops import stability_scores
+
+__all__ = ["stability_scores"]

@@ -1,0 +1,29 @@
+"""Public wrapper for the stability-score kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.stability_score.kernel import stability_scores_kernel
+from repro.kernels.stability_score.ref import stability_scores_ref
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "clip", "block_m",
+                                             "interpret", "use_kernel"))
+def stability_scores(w, mask, cand_latency, cand_batch, *, tau: float,
+                     clip: float = 10.0, block_m: int = 8,
+                     interpret: bool = False, use_kernel: bool = True):
+    """Score all M candidate decisions in one fused pass (Eq. 3-7).
+
+    w, mask [M, maxQ] (FIFO-sorted waits + validity); cand_latency [M];
+    cand_batch [M]. Returns [M] predicted post-decision stability scores.
+    """
+    if not use_kernel:
+        return stability_scores_ref(w, mask, cand_latency, cand_batch,
+                                    tau, clip)
+    return stability_scores_kernel(
+        w, mask, cand_latency.astype(jax.numpy.float32),
+        cand_batch.astype(jax.numpy.int32),
+        tau=tau, clip=clip, block_m=block_m, interpret=interpret)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for candidate stability scoring — re-exports the core
+implementation (paper Eq. 3-7) so the kernel tests validate against the
+exact scheduler semantics."""
+
+from repro.core.urgency import candidate_stability_scores as stability_scores_ref
+
+__all__ = ["stability_scores_ref"]

@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract roofline inputs from the compiled
+artifacts. No model weights are ever materialised (ShapeDtypeStruct only).
+
+The two lines above MUST stay the first statements in this file: jax locks
+the device count at first init, and only the dry-run wants 512 placeholder
+host devices (smoke tests and benches see the real single CPU).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                      # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --out artifacts
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (
+    ARCH_IDS,
+    SHAPES,
+    applicable,
+    get_config,
+    input_specs,
+    skip_reason,
+)
+from repro.distributed.sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    serve_rules,
+    train_rules,
+)
+from repro.launch.hlo_analysis import collective_bytes, hlo_metrics
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.runtime.trainer import (
+    abstract_opt_state,
+    make_train_step,
+    opt_state_shardings,
+    pick_optimizer_for,
+)
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _tree_bytes_per_device(tree, shardings, mesh) -> float:
+    """Static per-device bytes of a sharded ShapeDtypeStruct tree."""
+    total = 0.0
+    for leaf, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding))):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        shards = 1
+        for ax in jax.tree.leaves(tuple(sh.spec)):
+            if ax is not None:
+                shards *= mesh.shape[ax]
+        total += n * leaf.dtype.itemsize / shards
+    return total
+
+
+def _active_params(cfg, shapes_tree) -> float:
+    """Active (per-token) parameter count: total minus the non-routed share
+    of expert stacks."""
+    total = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes_tree))
+    if cfg.num_experts and cfg.top_k:
+        flat = jax.tree_util.tree_flatten_with_path(shapes_tree)[0]
+        routed = sum(
+            int(np.prod(s.shape))
+            for path, s in flat
+            if any("we_" in str(getattr(p, "key", "")) for p in path)
+        )
+        total -= routed * (1.0 - cfg.top_k / cfg.num_experts)
+    return float(total)
+
+
+def _model_flops(cfg, shapes_tree, kind: str, shape_spec) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N D (inference), N = active params."""
+    n_active = _active_params(cfg, shapes_tree)
+    if kind == "train":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape_spec.global_batch  # decode: one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def _serve_cast(shapes_tree, dtype):
+    """Serving stores weights in the compute dtype (bf16) — no fp32 master
+    copy exists outside training."""
+    def one(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(s.shape, dtype)
+        return s
+    return jax.tree.map(one, shapes_tree)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
+               serve_variant: str = "baseline", train_fsdp: bool = True,
+               exit_idx: Optional[int] = None,
+               overrides: Optional[dict] = None):
+    """Lower + compile one (arch x shape) cell. Returns the result record.
+
+    ``overrides`` hot-patches LMConfig fields for §Perf variants (e.g.
+    {"rwkv_chunk": 32}, {"mla_absorbed_decode": True},
+    {"vocab_pad_multiple": 256}).
+    """
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    model = build_model(cfg)
+    key = jax.random.key(0)
+    shapes, axes = model.abstract(key)
+    kind, kw = input_specs(cfg, shape_name, exit_idx=exit_idx)
+    spec = SHAPES[shape_name]
+    if kind != "train":
+        shapes = _serve_cast(shapes, cfg.dtype)
+
+    t0 = time.time()
+    if kind == "train":
+        if serve_variant == "pure-dp":
+            from repro.distributed.sharding import train_rules_pure_dp
+            rules = train_rules_pure_dp(multi_pod=multi_pod)
+        else:
+            rules = train_rules(multi_pod=multi_pod, fsdp=train_fsdp)
+        p_sh = param_shardings(shapes, axes, rules, mesh)
+        opt = pick_optimizer_for(cfg)
+        opt_shapes = abstract_opt_state(opt, shapes)
+        opt_sh = opt_state_shardings(opt, shapes, axes, rules, mesh)
+        b_sh = batch_shardings(kw["batch"], rules, mesh)
+        scalar_sh = NamedSharding(mesh, P())
+        step_fn = make_train_step(model, opt)
+        fn = jax.jit(
+            step_fn,
+            in_shardings=(p_sh, opt_sh, b_sh, scalar_sh),
+            out_shardings=(p_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+        lowered = fn.lower(shapes, opt_shapes, kw["batch"],
+                           jax.ShapeDtypeStruct((), jnp.int32))
+        arg_trees = [(shapes, p_sh), (opt_shapes, opt_sh),
+                     (kw["batch"], b_sh)]
+    elif kind == "prefill":
+        from repro.distributed.sharding import serve_rules_ep_wide
+        rules = (serve_rules_ep_wide(multi_pod) if serve_variant == "ep-wide"
+                 else serve_rules(multi_pod=multi_pod))
+        p_sh = param_shardings(shapes, axes, rules, mesh)
+        b_sh = batch_shardings(kw["batch"], rules, mesh)
+        e = kw["exit_idx"]
+        fn = jax.jit(
+            lambda v, b: model.prefill(v, b, e),
+            in_shardings=(p_sh, b_sh),
+        )
+        lowered = fn.lower(shapes, kw["batch"])
+        arg_trees = [(shapes, p_sh), (kw["batch"], b_sh)]
+    else:  # decode
+        from repro.distributed.sharding import serve_rules_ep_wide
+        rules = (serve_rules_ep_wide(multi_pod) if serve_variant == "ep-wide"
+                 else serve_rules(multi_pod=multi_pod))
+        p_sh = param_shardings(shapes, axes, rules, mesh)
+        tok_sh = batch_shardings(kw["token"], rules, mesh)
+        c_sh = cache_shardings(kw["cache"], rules, mesh)
+        e = kw["exit_idx"]
+        fn = jax.jit(
+            lambda v, t, c: model.decode_step(v, t, c, e),
+            in_shardings=(p_sh, tok_sh, c_sh),
+            donate_argnums=(2,),
+        )
+        lowered = fn.lower(shapes, kw["token"], kw["cache"])
+        arg_trees = [(shapes, p_sh), (kw["token"], tok_sh),
+                     (kw["cache"], c_sh)]
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # --- extract analysis ---------------------------------------------------
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "transcendentals",
+                 "utilization operand 0", "bytes accessed output")}
+    except Exception as ex:  # pragma: no cover
+        cost = {"error": str(ex)}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            a: float(getattr(mem, a))
+            for a in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes")
+            if hasattr(mem, a)
+        }
+    except Exception as ex:  # pragma: no cover
+        mem_d = {"error": str(ex)}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    # Trip-count-aware FLOP/byte accounting: XLA's cost_analysis counts a
+    # while (scan-over-layers) body once; hlo_metrics re-derives both with
+    # known_trip_count weighting (see hlo_analysis.py).
+    tripaware = hlo_metrics(hlo)
+
+    static_bytes = sum(
+        _tree_bytes_per_device(tree, sh, mesh) for tree, sh in arg_trees
+    )
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": kind,
+        "mesh": list(mesh.devices.shape),
+        "mesh_axes": list(mesh.axis_names),
+        "num_devices": int(mesh.devices.size),
+        "rules": rules.name,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "cost_analysis": cost,
+        "hlo_metrics": tripaware,
+        "memory_analysis": mem_d,
+        "collectives": coll,
+        "bytes_per_device_static": static_bytes,
+        "model_flops": _model_flops(cfg, shapes, kind, spec),
+        "hlo_bytes": len(hlo),
+        "serve_variant": serve_variant,
+        "overrides": overrides or {},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--serve-variant", default="baseline",
+                    choices=["baseline", "ep-wide", "pure-dp"])
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="train with pure DP instead of FSDP (perf ablation)")
+    ap.add_argument("--exit", type=int, default=None,
+                    help="exit index for serve shapes (default: final)")
+    ap.add_argument("--rwkv-chunk", type=int, default=0,
+                    help="§Perf: chunked-parallel WKV chunk length")
+    ap.add_argument("--mla-absorbed", action="store_true",
+                    help="§Perf: absorbed-matrix MLA decode")
+    ap.add_argument("--pad-vocab", type=int, default=0,
+                    help="§Perf: pad vocab to a multiple for sharding")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output json (variant label)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.rwkv_chunk:
+        overrides["rwkv_chunk"] = args.rwkv_chunk
+    if args.mla_absorbed:
+        overrides["mla_absorbed_decode"] = True
+    if args.pad_vocab:
+        overrides["vocab_pad_multiple"] = args.pad_vocab
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    cells = []
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            if applicable(cfg, s):
+                cells.append((a, s))
+            else:
+                cells.append((a, s, skip_reason(cfg, s)))
+    if args.list:
+        for c in cells:
+            print(c)
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    n_fail = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "multi" if multi_pod else "single"
+        for cell in cells:
+            a, s = cell[0], cell[1]
+            tag = f"{mesh_name}/{a}__{s}"
+            out_path = os.path.join(
+                args.out, mesh_name,
+                f"{a}__{s}"
+                + ("" if args.serve_variant == "baseline"
+                   else f"__{args.serve_variant}")
+                + ("" if args.exit is None else f"__e{args.exit}")
+                + (f"__{args.tag}" if args.tag else "")
+                + ".json")
+            os.makedirs(os.path.dirname(out_path), exist_ok=True)
+            if len(cell) == 3:
+                rec = {"arch": a, "shape": s, "skipped": cell[2],
+                       "mesh": mesh_name}
+                with open(out_path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"[skip] {tag}: {cell[2]}")
+                continue
+            try:
+                rec = lower_cell(a, s, mesh, multi_pod,
+                                 serve_variant=args.serve_variant,
+                                 train_fsdp=not args.no_fsdp,
+                                 exit_idx=args.exit,
+                                 overrides=overrides)
+                with open(out_path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                ca = rec["cost_analysis"]
+                print(
+                    f"[ok]   {tag}: compile={rec['compile_s']:.1f}s "
+                    f"flops={ca.get('flops', float('nan')):.3e} "
+                    f"coll={rec['collectives']['bytes']['total']:.3e}B "
+                    f"static={rec['bytes_per_device_static']/2**30:.2f}GiB/dev"
+                )
+            except Exception:
+                n_fail += 1
+                err = traceback.format_exc()
+                with open(out_path, "w") as f:
+                    json.dump({"arch": a, "shape": s, "mesh": mesh_name,
+                               "error": err[-4000:]}, f, indent=1)
+                print(f"[FAIL] {tag}:\n{err[-2000:]}")
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

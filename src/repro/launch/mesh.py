@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state. The dry-run (and only the dry-run) sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import so the 256-chip single-pod and 512-chip multi-pod meshes can be
+built from host placeholder devices.
+
+Production target: TPU v5e pods, 16 x 16 chips per pod;
+multi-pod = 2 pods with a leading "pod" data-parallel axis.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Small mesh over the locally available devices (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh(
+        (n // model_axis, model_axis), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12          # 197 TFLOP/s bf16
+HBM_BW = 819e9                    # 819 GB/s
+ICI_BW_PER_LINK = 50e9            # ~50 GB/s/link

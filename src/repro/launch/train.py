@@ -1,0 +1,103 @@
+"""Training driver.
+
+Local (this container):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
+      --steps 100 --batch 8 --seq 64
+
+Production posture (TPU pod): the same entry point — the mesh comes from
+``make_production_mesh()``, params/optimizer are sharded by the train
+rules, checkpoints are written asynchronously, and preemption triggers a
+final checkpoint + clean exit (see repro.runtime.fault_tolerance).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import synthetic_lm_batches
+from repro.models import build_model, split_params
+from repro.optim import cosine_schedule
+from repro.runtime.checkpoint import Checkpointer
+from repro.runtime.fault_tolerance import PreemptionGuard
+from repro.runtime.trainer import make_train_step, pick_optimizer_for
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    values, _ = split_params(model.init(jax.random.key(args.seed)))
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(values))
+    print(f"arch={cfg.arch_id} params={n_params/1e6:.1f}M "
+          f"exits={cfg.exits} devices={len(jax.devices())}")
+
+    opt = pick_optimizer_for(cfg, lr=cosine_schedule(args.lr, 20, args.steps))
+    opt_state = opt.init(values)
+    step_fn = jax.jit(make_train_step(model, opt, grad_accum=args.grad_accum))
+
+    ck = None
+    start_step = 0
+    if args.checkpoint_dir:
+        ck = Checkpointer(args.checkpoint_dir)
+        if args.resume and ck.latest_step() is not None:
+            start_step, state, _ = ck.restore(
+                template={"values": values, "opt": opt_state})
+            values, opt_state = state["values"], state["opt"]
+            print(f"resumed from step {start_step}")
+
+    guard = PreemptionGuard(install_sigterm=True)
+    batches = synthetic_lm_batches(
+        vocab=cfg.vocab_size, batch=args.batch, seq=args.seq,
+        seed=args.seed, encdec=cfg.family == "encdec",
+        d_model=cfg.d_model, src_len=max(cfg.frontend_seq, 8),
+        vision=cfg.frontend == "vision")
+
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = next(batches)
+        values, opt_state, metrics = step_fn(values, opt_state, batch, step)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            per_exit = [
+                float(metrics[k]) for k in sorted(metrics)
+                if k.startswith("nll_exit")
+            ]
+            dt = (time.time() - t0) / max(step - start_step + 1, 1)
+            print(f"step {step:5d} loss={loss:.4f} "
+                  f"exits={['%.3f' % e for e in per_exit]} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} {dt:.2f}s/step")
+        if ck and (step % args.checkpoint_every == 0 or
+                   step == args.steps - 1 or guard.should_stop()):
+            ck.save(step + 1, {"values": values, "opt": opt_state},
+                    extra={"loss": float(metrics["loss"])})
+        if guard.should_stop():
+            print("preemption requested: checkpointed and exiting cleanly")
+            break
+    if ck:
+        ck.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Model substrate: early-exit model zoo in pure JAX.
+
+``build_model(cfg)`` dispatches an LMConfig to its family's model class;
+every model exposes the same interface:
+
+    init(key) -> Param tree                   (split with split_params)
+    abstract(key) -> (ShapeDtypeStruct tree, axes tree)   (zero-alloc)
+    train_loss(values, batch) -> (loss, metrics)
+    forward_exit(values, batch_or_x, exit_idx) -> logits
+    prefill(values, batch, exit_idx) -> (logits, cache)
+    decode_step(values, token, cache, exit_idx) -> (logits, cache)
+    init_cache(batch, max_len, exit_idx) -> cache pytree
+"""
+
+from repro.models.common import (
+    Param,
+    abstract_params,
+    cross_entropy,
+    is_param,
+    make_param,
+    rms_norm,
+    split_params,
+    stack_init,
+)
+from repro.models.encdec import EncDecLM
+from repro.models.jamba_model import JambaLM
+from repro.models.resnet import EarlyExitResNet, ResNetConfig
+from repro.models.rwkv_model import RWKV6LM
+from repro.models.transformer import DecoderLM, LMConfig
+
+_FAMILIES = {
+    "dense": DecoderLM,
+    "moe": DecoderLM,
+    "rwkv": RWKV6LM,
+    "jamba": JambaLM,
+    "encdec": EncDecLM,
+}
+
+
+def build_model(cfg: LMConfig):
+    try:
+        return _FAMILIES[cfg.family](cfg)
+    except KeyError:
+        raise ValueError(
+            f"unknown family {cfg.family!r}; known: {sorted(_FAMILIES)}"
+        ) from None
+
+
+__all__ = [
+    "DecoderLM",
+    "EarlyExitResNet",
+    "EncDecLM",
+    "JambaLM",
+    "LMConfig",
+    "Param",
+    "RWKV6LM",
+    "ResNetConfig",
+    "abstract_params",
+    "build_model",
+    "cross_entropy",
+    "is_param",
+    "make_param",
+    "rms_norm",
+    "split_params",
+    "stack_init",
+]

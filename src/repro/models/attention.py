@@ -1,0 +1,303 @@
+"""Attention variants: GQA (with optional QK-norm) and DeepSeek-style MLA.
+
+Shapes: activations are ``[B, S, D]``; query heads ``H``, kv heads ``K``
+(GQA groups ``G = H // K``), head dim ``Dh``. KV caches are per layer
+``{"k": [B, Smax, K, Dh], "v": [B, Smax, K, Dh]}`` (MLA caches the
+compressed latent instead — its whole point is an ``O(d_c)`` cache).
+
+The jnp attention here is the reference path (and the dry-run path — see
+DESIGN.md: Pallas kernels are validated separately in interpret mode and
+swapped in on real TPU via ``use_flash_kernel``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Param, apply_rope, make_param, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qk_norm: bool = False          # qwen3-style per-head RMS norm on q and k
+    causal: bool = True
+    use_flash_kernel: bool = False  # swap in the Pallas kernel (TPU path)
+    attn_bias: bool = False
+
+
+def init_attention(key: jax.Array, cfg: AttentionConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    d, h, k_h, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    params = {
+        "wq": make_param(ks[0], (d, h * dh), ("embed", "heads")),
+        "wk": make_param(ks[1], (d, k_h * dh), ("embed", "heads")),
+        "wv": make_param(ks[2], (d, k_h * dh), ("embed", "heads")),
+        "wo": make_param(ks[3], (h * dh, d), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = make_param(ks[4], (dh,), (None,), init="ones")
+        params["k_norm"] = make_param(ks[5], (dh,), (None,), init="ones")
+    return params
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=0, kv_len: Optional[jax.Array] = None):
+    """Scaled dot-product attention with GQA via kv-head broadcasting.
+
+    q [B, Sq, H, Dh]; k, v [B, Skv, K, Dh]. fp32 softmax accumulation.
+    ``q_offset`` is the absolute position of q[0] (decode: cache length).
+    ``kv_len`` optionally masks the cache tail (positions >= kv_len).
+    """
+    b, sq, h, dh = q.shape
+    _, skv, kh, _ = k.shape
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores *= 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    if causal and sq > 1:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(skv)
+        mask = kpos[None, :] <= qpos[:, None]                # [Sq, Skv]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if kv_len is not None:
+        valid = jnp.arange(skv)[None, :] < kv_len[:, None]   # [B, Skv]
+        scores = jnp.where(valid[:, None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def attention(
+    params: dict,
+    x: jax.Array,
+    cfg: AttentionConfig,
+    cache: Optional[dict] = None,
+    position: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Self-attention forward.
+
+    Modes:
+      * train/prefill: ``cache is None`` -> full causal attention over x.
+        When ``position`` is given (prefill), a fresh cache dict is returned.
+      * decode: ``cache`` holds {"k","v","len"}; x is ``[B, 1, D]``; returns
+        updated cache (functional, donate-friendly).
+    """
+    b, s, d = x.shape
+    h, kh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    k = (x @ params["wk"]).reshape(b, s, kh, dh)
+    v = (x @ params["wv"]).reshape(b, s, kh, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+
+    if cache is None:
+        pos = jnp.arange(s)[None, :]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        out = _sdpa(q, k, v, cfg.causal)
+        new_cache = None
+        if position is not None:  # prefill: hand the KV back for decode
+            new_cache = {"k": k, "v": v, "len": jnp.full((b,), s, jnp.int32)}
+    else:
+        cache_len = cache["len"]                              # [B]
+        pos = cache_len[:, None]                              # x is the next token
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        # Scatter the new token at its position. All rows share the same
+        # length in this serving runtime, so use row 0's length.
+        idx = cache_len[0]
+        k_all = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0)
+        )
+        v_all = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0)
+        )
+        out = _sdpa(q, k_all, v_all, causal=False, kv_len=cache_len + 1)
+        new_cache = {"k": k_all, "v": v_all, "len": cache_len + 1}
+
+    return out.reshape(b, s, h * dh) @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    num_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+    causal: bool = True
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+
+def init_mla(key: jax.Array, cfg: MLAConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    d, h = cfg.d_model, cfg.num_heads
+    return {
+        # low-rank query path: d -> q_lora -> heads*(nope+rope)
+        "wq_a": make_param(ks[0], (d, cfg.q_lora_rank), ("embed", None)),
+        "q_a_norm": make_param(ks[1], (cfg.q_lora_rank,), (None,), init="ones"),
+        "wq_b": make_param(ks[2], (cfg.q_lora_rank, h * cfg.qk_head_dim),
+                           (None, "heads")),
+        # compressed kv path: d -> kv_lora (+ shared rope key)
+        "wkv_a": make_param(ks[3], (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+                            ("embed", None)),
+        "kv_a_norm": make_param(ks[4], (cfg.kv_lora_rank,), (None,), init="ones"),
+        "wkv_b": make_param(
+            ks[5],
+            (cfg.kv_lora_rank, h * (cfg.qk_nope_head_dim + cfg.v_head_dim)),
+            (None, "heads"),
+        ),
+        "wo": make_param(ks[6], (h * cfg.v_head_dim, d), ("heads", "embed")),
+    }
+
+
+def _mla_qkv(params, x, cfg: MLAConfig, positions):
+    """Project x into per-head q, k, v (+ return the compressed latent)."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q = rms_norm(x @ params["wq_a"], params["q_a_norm"]) @ params["wq_b"]
+    q = q.reshape(b, s, h, cfg.qk_head_dim)
+    q_nope, q_pe = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    kv_a = x @ params["wkv_a"]                                 # [B,S,dc+rope]
+    c_kv, k_pe = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, params["kv_a_norm"])
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,r]
+
+    kv = (c_kv @ params["wkv_b"]).reshape(
+        b, s, h, cfg.qk_nope_head_dim + cfg.v_head_dim
+    )
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_head_dim], axis=-1)
+    k_pe_bcast = jnp.broadcast_to(k_pe, (b, s, h, cfg.qk_rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_pe_bcast], axis=-1)
+    return q_full, k_full, v, c_kv, k_pe[:, :, 0, :]
+
+
+def mla_attention(
+    params: dict,
+    x: jax.Array,
+    cfg: MLAConfig,
+    cache: Optional[dict] = None,
+    position: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """MLA forward. The decode cache stores the *compressed* latent
+    ``c_kv [B, Smax, d_c]`` + rope key ``k_pe [B, Smax, r]`` — the O(d_c)
+    per-token cache that makes MLA serve long contexts cheaply."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+
+    if cache is None:
+        pos = jnp.arange(s)[None, :]
+        q, k, v, c_kv, k_pe = _mla_qkv(params, x, cfg, pos)
+        out = _sdpa(q, k, v, cfg.causal)
+        new_cache = None
+        if position is not None:
+            new_cache = {
+                "c_kv": c_kv, "k_pe": k_pe,
+                "len": jnp.full((b,), s, jnp.int32),
+            }
+    else:
+        cache_len = cache["len"]
+        pos = cache_len[:, None]
+        q, k_new, v_new, c_kv_new, k_pe_new = _mla_qkv(params, x, cfg, pos)
+        idx = cache_len[0]
+        c_all = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, idx, 0))
+        pe_all = jax.lax.dynamic_update_slice(
+            cache["k_pe"], k_pe_new.astype(cache["k_pe"].dtype), (0, idx, 0))
+        # Expand latent -> per-head K/V for the attention itself.
+        s_kv = c_all.shape[1]
+        kv = (c_all @ params["wkv_b"]).reshape(
+            b, s_kv, h, cfg.qk_nope_head_dim + cfg.v_head_dim)
+        k_nope, v = jnp.split(kv, [cfg.qk_nope_head_dim], axis=-1)
+        k_pe_b = jnp.broadcast_to(
+            pe_all[:, :, None, :], (b, s_kv, h, cfg.qk_rope_head_dim))
+        k = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+        out = _sdpa(q, k, v, causal=False, kv_len=cache_len + 1)
+        new_cache = {"c_kv": c_all, "k_pe": pe_all, "len": cache_len + 1}
+
+    out = out.reshape(b, s, h * cfg.v_head_dim) @ params["wo"]
+    return out, new_cache
+
+
+def mla_attention_absorbed(
+    params: dict,
+    x: jax.Array,
+    cfg: MLAConfig,
+    cache: dict,
+) -> Tuple[jax.Array, dict]:
+    """Absorbed-matrix MLA decode (DeepSeek-V2/V3 inference form).
+
+    Mathematically identical to expanding the latent into per-head K/V, but
+    attention runs *in latent space*: the nope-query is projected through
+    W_k into the latent (``q_eff = q_nope @ W_k``), scores are taken against
+    the cached latent directly, and the context is re-expanded through W_v
+    only for the single output token.
+
+    Per decode step this reads the cache once — O(S * d_c) — instead of
+    materialising K/V at O(S * H * (d_nope + d_v)): a 64x HBM-traffic
+    reduction for V3's 128 heads (see EXPERIMENTS.md §Perf).
+    """
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dv, dc = cfg.qk_nope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    cache_len = cache["len"]
+    pos = cache_len[:, None]
+
+    q = rms_norm(x @ params["wq_a"], params["q_a_norm"]) @ params["wq_b"]
+    q = q.reshape(b, s, h, cfg.qk_head_dim)
+    q_nope, q_pe = jnp.split(q, [dn], axis=-1)
+    q_pe = apply_rope(q_pe, pos, cfg.rope_theta)
+
+    kv_a = x @ params["wkv_a"]
+    c_new, k_pe_new = jnp.split(kv_a, [dc], axis=-1)
+    c_new = rms_norm(c_new, params["kv_a_norm"])
+    k_pe_new = apply_rope(k_pe_new[:, :, None, :], pos,
+                          cfg.rope_theta)[:, :, 0, :]
+
+    idx = cache_len[0]
+    c_all = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, idx, 0))
+    pe_all = jax.lax.dynamic_update_slice(
+        cache["k_pe"], k_pe_new.astype(cache["k_pe"].dtype), (0, idx, 0))
+
+    # absorbed weights: wkv_b [dc, H*(dn+dv)] -> W_k [dc,H,dn], W_v [dc,H,dv]
+    wkv_b = params["wkv_b"].reshape(dc, h, dn + dv)
+    w_k, w_v = wkv_b[..., :dn], wkv_b[..., dn:]
+
+    q_eff = jnp.einsum("bshd,chd->bshc", q_nope, w_k)        # [B,1,H,dc]
+    scores = (
+        jnp.einsum("bshc,btc->bhst", q_eff, c_all)
+        + jnp.einsum("bshr,btr->bhst", q_pe, pe_all)
+    ).astype(jnp.float32)
+    scores *= 1.0 / jnp.sqrt(cfg.qk_head_dim).astype(jnp.float32)
+    s_kv = c_all.shape[1]
+    valid = jnp.arange(s_kv)[None, :] < (cache_len + 1)[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+
+    o_latent = jnp.einsum("bhst,btc->bshc", probs, c_all)    # [B,1,H,dc]
+    out = jnp.einsum("bshc,chd->bshd", o_latent, w_v)        # [B,1,H,dv]
+    out = out.reshape(b, s, h * dv) @ params["wo"]
+    return out, {"c_kv": c_all, "k_pe": pe_all, "len": cache_len + 1}

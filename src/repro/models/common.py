@@ -1,0 +1,216 @@
+"""Shared model-substrate primitives: parameters with logical sharding axes,
+norms, embeddings, RoPE, and losses.
+
+Parameter convention
+--------------------
+Every parameter is created through :func:`make_param` and carried as a
+:class:`Param` leaf — ``(value, logical_axes)``. Model code works on *value*
+pytrees (plain ``jax.Array`` leaves); the axes pytree is split off once at
+init and mapped to mesh axes by ``repro.distributed.sharding`` rules. This
+keeps the forward code framework-free while giving the dry-run exact
+per-parameter PartitionSpecs.
+
+Scan-over-layers convention
+---------------------------
+Repeated blocks are *stacked*: each leaf gains a leading ``layers`` axis and
+the stack is consumed by ``jax.lax.scan``. This keeps HLO size and compile
+time O(1) in depth (critical for the 512-device dry-run) and is reflected in
+the axes tuples by a leading ``"layers"`` entry (never sharded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """A parameter leaf: array value + logical axis names (len == ndim)."""
+
+    value: jax.Array
+    axes: Axes
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def make_param(
+    key: jax.Array,
+    shape: Sequence[int],
+    axes: Axes,
+    dtype=jnp.float32,
+    init: str = "normal",
+    scale: Optional[float] = None,
+) -> Param:
+    """Create a Param with the given initializer.
+
+    init: "normal" (trunc-normal, fan-in scaled unless ``scale`` given),
+          "zeros", "ones", "embedding" (normal(1.0/sqrt(d))).
+    """
+    shape = tuple(int(s) for s in shape)
+    assert len(axes) == len(shape), (axes, shape)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            fan_in = shape[0] if len(shape) >= 1 else 1
+            if init == "embedding":
+                fan_in = shape[-1]
+            scale = 1.0 / np.sqrt(max(fan_in, 1))
+        v = (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+    return Param(v, tuple(axes))
+
+
+def split_params(tree: PyTree) -> Tuple[PyTree, PyTree]:
+    """Param tree -> (values tree, axes tree) with identical structure."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def abstract_params(init_fn: Callable[[jax.Array], PyTree], key: jax.Array):
+    """Shape-only init: (ShapeDtypeStruct values tree, axes tree).
+
+    Runs ``init_fn`` under ``jax.eval_shape`` — zero FLOPs, zero allocation —
+    capturing the static axes tuples through a side channel. This is how the
+    dry-run builds 671B-parameter input specs on a CPU host.
+    """
+    captured = []
+
+    def value_only(k):
+        params = init_fn(k)
+        captured.append(jax.tree.map(lambda p: p.axes, params, is_leaf=is_param))
+        return jax.tree.map(lambda p: p.value, params, is_leaf=is_param)
+
+    shapes = jax.eval_shape(value_only, key)
+    return shapes, captured[0]
+
+
+def stack_init(block_init: Callable[[jax.Array], PyTree], key: jax.Array, n: int):
+    """Initialise ``n`` stacked copies of a block (scan-over-layers).
+
+    Returns a Param tree whose leaves have a leading ``n`` axis and a
+    prepended ``"layers"`` logical axis.
+    """
+    keys = jax.random.split(key, n)
+    stacked_values = jax.vmap(
+        lambda k: jax.tree.map(lambda p: p.value, block_init(k), is_leaf=is_param)
+    )(keys)
+    axes_tree = jax.tree.map(
+        lambda p: ("layers",) + p.axes, block_init(key), is_leaf=is_param
+    )
+    # Re-wrap into Params: leaf positions follow stacked_values (array
+    # leaves); flatten_up_to semantics hand each one its whole axes tuple.
+    return jax.tree.map(lambda v, a: Param(v, a), stacked_values, axes_tree)
+
+
+def cast_floats(tree: PyTree, dtype) -> PyTree:
+    """Cast float leaves to the compute dtype (mixed precision: the master
+    copy stays fp32 in the optimizer; forward casts at entry)."""
+
+    def one(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in fp32 accumulation, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    """[head_dim/2] inverse frequencies."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotate ``x [..., S, H, D]`` by ``positions [..., S]`` (broadcastable).
+
+    Pairs (x[2i], x[2i+1]) are rotated — the interleaved convention.
+    """
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)                          # [D/2]
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv  # [...,S,1,D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token-level CE. logits [..., V] fp32-accumulated, labels int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def mask_padded_vocab(logits: jax.Array, vocab: int) -> jax.Array:
+    """Mask sharding-padding vocab slots to -inf (no-op when unpadded)."""
+    if logits.shape[-1] == vocab:
+        return logits
+    keep = jnp.arange(logits.shape[-1]) < vocab
+    return jnp.where(keep, logits, -1e30)
+
+
+def weighted_exit_loss(per_exit_nll: Sequence[jax.Array],
+                       weights: Sequence[float]) -> jax.Array:
+    """Early-exit training objective: weighted sum of per-exit CE losses.
+
+    The paper trains every exit head jointly; the standard weighting puts
+    full weight on the final head and smaller weight on early heads.
+    """
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    w = w / jnp.sum(w)
+    return sum(wi * li for wi, li in zip(w, per_exit_nll))

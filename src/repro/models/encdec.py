@@ -1,0 +1,274 @@
+"""Encoder-decoder early-exit LM (SeamlessM4T backbone; family == "encdec").
+
+The audio frontend is a STUB per the assignment spec: ``input_specs()``
+provides precomputed frame embeddings ``[B, S_src, D]`` directly to the
+encoder. Early exits attach to the **decoder** stack only — the encoder
+always runs fully, because every exit's cross-attention consumes the full
+encoder output (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import _sdpa, attention, init_attention
+from repro.models.common import (
+    abstract_params,
+    cast_floats,
+    cross_entropy,
+    make_param,
+    mask_padded_vocab,
+    rms_norm,
+    stack_init,
+    weighted_exit_loss,
+)
+from repro.models.moe import init_mlp, mlp
+from repro.models.transformer import LMConfig, _remat_wrap
+
+
+def init_cross_attention(key: jax.Array, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    d, h, kh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": make_param(ks[0], (d, h * dh), ("embed", "heads")),
+        "wk": make_param(ks[1], (d, kh * dh), ("embed", "heads")),
+        "wv": make_param(ks[2], (d, kh * dh), ("embed", "heads")),
+        "wo": make_param(ks[3], (h * dh, d), ("heads", "embed")),
+    }
+
+
+def cross_attention(params, x, enc_kv, cfg):
+    """x [B, St, D] attends to precomputed encoder K/V (no positions)."""
+    b, s, _ = x.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    out = _sdpa(q, enc_kv["k"], enc_kv["v"], causal=False)
+    return out.reshape(b, s, h * dh) @ params["wo"]
+
+
+def encode_kv(params, enc_out, cfg):
+    """Project encoder output once per session into cross-attn K/V."""
+    b, s, _ = enc_out.shape
+    kh, dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": (enc_out @ params["wk"]).reshape(b, s, kh, dh),
+        "v": (enc_out @ params["wv"]).reshape(b, s, kh, dh),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg: LMConfig):
+        assert cfg.family == "encdec" and cfg.num_encoder_layers > 0
+        self.cfg = cfg
+
+    # -- blocks ----------------------------------------------------------------
+
+    def _init_enc_block(self, key: jax.Array) -> dict:
+        c = self.cfg
+        ks = jax.random.split(key, 4)
+        return {
+            "norm1": make_param(ks[0], (c.d_model,), ("embed",), init="ones"),
+            "norm2": make_param(ks[1], (c.d_model,), ("embed",), init="ones"),
+            "attn": init_attention(ks[2], c.attn_config()),
+            "ffn": init_mlp(ks[3], c.mlp_config()),
+        }
+
+    def _init_dec_block(self, key: jax.Array) -> dict:
+        c = self.cfg
+        ks = jax.random.split(key, 6)
+        return {
+            "norm1": make_param(ks[0], (c.d_model,), ("embed",), init="ones"),
+            "norm2": make_param(ks[1], (c.d_model,), ("embed",), init="ones"),
+            "norm3": make_param(ks[2], (c.d_model,), ("embed",), init="ones"),
+            "attn": init_attention(ks[3], c.attn_config()),
+            "xattn": init_cross_attention(ks[4], c.attn_config()),
+            "ffn": init_mlp(ks[5], c.mlp_config()),
+        }
+
+    # -- init --------------------------------------------------------------------
+
+    def init(self, key: jax.Array):
+        c = self.cfg
+        segs = self.segments()
+        keys = jax.random.split(key, len(segs) + 5)
+        return {
+            "embed": make_param(keys[0], (c.vocab_padded, c.d_model),
+                                ("vocab", "embed"), init="embedding"),
+            "enc_norm": make_param(keys[1], (c.d_model,), ("embed",),
+                                   init="ones"),
+            "exit_norms": [
+                make_param(keys[2], (c.d_model,), ("embed",), init="ones")
+                for _ in range(c.num_exits)
+            ],
+            "lm_head": make_param(keys[3], (c.d_model, c.vocab_padded),
+                                  ("embed", "vocab")),
+            "encoder": stack_init(self._init_enc_block, keys[4],
+                                  c.num_encoder_layers),
+            "segments": [
+                stack_init(self._init_dec_block, keys[5 + i], n)
+                for i, n in enumerate(segs)
+            ],
+        }
+
+    def abstract(self, key: jax.Array):
+        return abstract_params(self.init, key)
+
+    def segments(self) -> List[int]:
+        bounds = [0] + list(self.cfg.exits)
+        return [b - a for a, b in zip(bounds, bounds[1:])]
+
+    # -- encoder -------------------------------------------------------------------
+
+    def encode(self, values, src_embeds: jax.Array) -> jax.Array:
+        """Full (bidirectional) encoder over frontend-stub embeddings."""
+        c = self.cfg
+        acfg = functools.partial  # readability only
+        cfg_attn = c.attn_config()
+        cfg_attn = type(cfg_attn)(**{**cfg_attn.__dict__, "causal": False})
+        h = src_embeds.astype(c.dtype)
+
+        def body(h, layer_params):
+            x = rms_norm(h, layer_params["norm1"], c.norm_eps)
+            out, _ = attention(layer_params["attn"], x, cfg_attn)
+            h = h + out
+            x = rms_norm(h, layer_params["norm2"], c.norm_eps)
+            return h + mlp(layer_params["ffn"], x, c.mlp_config()), None
+
+        body = _remat_wrap(body, c.remat)
+        h, _ = jax.lax.scan(body, h, values["encoder"])
+        return rms_norm(h, values["enc_norm"], c.norm_eps)
+
+    # -- decoder --------------------------------------------------------------------
+
+    def _run_segment(self, seg_params, h, enc_out, caches, make_cache: bool):
+        c = self.cfg
+
+        def body(carry, xs):
+            h = carry
+            layer_params, layer_cache = xs
+            x = rms_norm(h, layer_params["norm1"], c.norm_eps)
+            pos = jnp.zeros((), jnp.int32) if make_cache else None
+            self_cache = layer_cache.get("self") if layer_cache else None
+            out, new_self = attention(layer_params["attn"], x, c.attn_config(),
+                                      cache=self_cache, position=pos)
+            h = h + out
+            x = rms_norm(h, layer_params["norm2"], c.norm_eps)
+            enc_kv = (layer_cache.get("enc_kv") if layer_cache else None)
+            if enc_kv is None:
+                enc_kv = encode_kv(layer_params["xattn"], enc_out,
+                                   c.attn_config())
+            h = h + cross_attention(layer_params["xattn"], x, enc_kv,
+                                    c.attn_config())
+            x = rms_norm(h, layer_params["norm3"], c.norm_eps)
+            h = h + mlp(layer_params["ffn"], x, c.mlp_config())
+            new_cache = None
+            if make_cache:
+                new_cache = {"self": new_self, "enc_kv": enc_kv}
+            elif layer_cache is not None:
+                new_cache = {"self": new_self, "enc_kv": enc_kv}
+            return h, new_cache
+
+        body = _remat_wrap(body, c.remat)
+        h, new_caches = jax.lax.scan(body, h, (seg_params, caches))
+        return h, new_caches
+
+    def _head(self, values, h, exit_idx):
+        h = rms_norm(h, values["exit_norms"][exit_idx], self.cfg.norm_eps)
+        logits = (h @ values["lm_head"].astype(h.dtype)).astype(jnp.float32)
+        return mask_padded_vocab(logits, self.cfg.vocab_size)
+
+    # -- public API --------------------------------------------------------------------
+
+    def train_loss(self, values, batch):
+        """batch: {"src_embeds": [B,Ss,D], "tokens": [B,St], "labels"}."""
+        c = self.cfg
+        values = cast_floats(values, c.dtype)
+        enc_out = self.encode(values, batch["src_embeds"])
+        h = values["embed"][batch["tokens"]].astype(c.dtype)
+        per_exit = []
+        for i in range(len(self.segments())):
+            h, _ = self._run_segment(values["segments"][i], h, enc_out,
+                                     None, False)
+            per_exit.append(cross_entropy(self._head(values, h, i),
+                                          batch["labels"], batch.get("mask")))
+        loss = weighted_exit_loss(per_exit, c.exit_weights_)
+        return loss, {"loss": loss, "nll_final": per_exit[-1],
+                      **{f"nll_exit{i}": l for i, l in enumerate(per_exit)}}
+
+    def forward_exit(self, values, batch, exit_idx: int):
+        c = self.cfg
+        values = cast_floats(values, c.dtype)
+        enc_out = self.encode(values, batch["src_embeds"])
+        h = values["embed"][batch["tokens"]].astype(c.dtype)
+        for i in range(exit_idx + 1):
+            h, _ = self._run_segment(values["segments"][i], h, enc_out,
+                                     None, False)
+        return self._head(values, h, exit_idx)
+
+    def prefill(self, values, batch, exit_idx: int):
+        c = self.cfg
+        values = cast_floats(values, c.dtype)
+        enc_out = self.encode(values, batch["src_embeds"])
+        h = values["embed"][batch["tokens"]].astype(c.dtype)
+        caches = []
+        for i in range(exit_idx + 1):
+            h, seg_cache = self._run_segment(values["segments"][i], h,
+                                             enc_out, None, True)
+            caches.append(seg_cache)
+        return self._head(values, h[:, -1:, :], exit_idx), {"segments": caches}
+
+    def decode_step(self, values, token, cache, exit_idx: int):
+        """Decode with self-attn KV cache + fixed cross-attn K/V."""
+        c = self.cfg
+        values = cast_floats(values, c.dtype)
+        h = values["embed"][token].astype(c.dtype)
+        dummy_enc = None  # enc_kv comes from the cache
+        new_caches = []
+        for i in range(exit_idx + 1):
+            h, seg_cache = self._run_segment(
+                values["segments"][i], h, dummy_enc, cache["segments"][i],
+                False)
+            new_caches.append(seg_cache)
+        return self._head(values, h, exit_idx), {"segments": new_caches}
+
+    def prepare_decode_cache(self, values, src_embeds, batch_size: int,
+                             max_len: int, exit_idx: int) -> dict:
+        """Fresh decode cache with the cross-attn K/V precomputed from the
+        encoder output (run once per serving session)."""
+        enc_out = self.encode(values, src_embeds)
+        cache = self.init_cache(batch_size, max_len, exit_idx,
+                                src_len=src_embeds.shape[1])
+        acfg = self.cfg.attn_config()
+        for i, seg in enumerate(cache["segments"]):
+            seg["enc_kv"] = jax.vmap(
+                lambda p: encode_kv(p, enc_out, acfg)
+            )(values["segments"][i]["xattn"])
+        return cache
+
+    def init_cache(self, batch_size: int, max_len: int, exit_idx: int,
+                   src_len: int = 0, dtype=None) -> dict:
+        c = self.cfg
+        dtype = dtype or c.dtype
+        src_len = src_len or max(c.frontend_seq, 1)
+        out = []
+        for n in self.segments()[: exit_idx + 1]:
+            out.append({
+                "self": {
+                    "k": jnp.zeros((n, batch_size, max_len, c.num_kv_heads,
+                                    c.head_dim_), dtype),
+                    "v": jnp.zeros((n, batch_size, max_len, c.num_kv_heads,
+                                    c.head_dim_), dtype),
+                    "len": jnp.zeros((n, batch_size), jnp.int32),
+                },
+                "enc_kv": {
+                    "k": jnp.zeros((n, batch_size, src_len, c.num_kv_heads,
+                                    c.head_dim_), dtype),
+                    "v": jnp.zeros((n, batch_size, src_len, c.num_kv_heads,
+                                    c.head_dim_), dtype),
+                },
+            })
+        return {"segments": out}

@@ -1,0 +1,254 @@
+"""Jamba-style hybrid LM: Mamba + attention at a 1:7 ratio with interleaved
+MoE (arXiv:2403.19887).
+
+Layers are grouped into *superblocks* of ``attn_period`` (8) layers — one
+attention layer (at ``attn_offset``) and seven Mamba layers, with MoE on
+every ``moe_period``-th (2nd) layer. The stack scans over stacked
+superblocks, so HLO size is O(1) in depth and the exit boundaries (multiples
+of 8) align with superblock edges.
+
+Early exit interacts with the hybrid structure exactly as the paper's
+technique requires: a shallower exit skips the remaining superblocks'
+attention KV writes, Mamba state updates, and routed-expert FLOPs alike.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention, init_attention
+from repro.models.common import (
+    abstract_params,
+    cast_floats,
+    cross_entropy,
+    make_param,
+    mask_padded_vocab,
+    rms_norm,
+    stack_init,
+    weighted_exit_loss,
+)
+from repro.models.mamba import MambaConfig, init_mamba, mamba
+from repro.models.moe import init_mlp, init_moe, mlp, moe
+from repro.models.transformer import LMConfig, _remat_wrap
+
+
+class JambaLM:
+    """Early-exit hybrid LM. Uses LMConfig with family == "jamba"."""
+
+    def __init__(self, cfg: LMConfig):
+        assert cfg.family == "jamba"
+        assert cfg.attn_period > 0 and cfg.num_layers % cfg.attn_period == 0
+        for e in cfg.exits:
+            assert e % cfg.attn_period == 0, (
+                "jamba exits must align to superblock boundaries"
+            )
+        self.cfg = cfg
+
+    # -- structure ---------------------------------------------------------
+
+    def _mamba_config(self) -> MambaConfig:
+        c = self.cfg
+        return MambaConfig(
+            d_model=c.d_model, d_state=c.mamba_d_state,
+            d_conv=c.mamba_d_conv, expand=c.mamba_expand,
+        )
+
+    def _sub_kinds(self) -> List[Tuple[str, str]]:
+        """Per sublayer within a superblock: (mixer, ffn) kinds."""
+        c = self.cfg
+        kinds = []
+        for j in range(c.attn_period):
+            mixer = "attn" if j == c.attn_offset else "mamba"
+            ffn = "moe" if (c.moe_period and j % c.moe_period == 1) else "mlp"
+            kinds.append((mixer, ffn))
+        return kinds
+
+    def _init_superblock(self, key: jax.Array) -> dict:
+        c = self.cfg
+        kinds = self._sub_kinds()
+        keys = jax.random.split(key, 4 * len(kinds))
+        p: Dict[str, Any] = {}
+        for j, (mixer, ffn) in enumerate(kinds):
+            kj = keys[4 * j : 4 * j + 4]
+            sub = {
+                "norm1": make_param(kj[0], (c.d_model,), ("embed",), init="ones"),
+                "norm2": make_param(kj[1], (c.d_model,), ("embed",), init="ones"),
+            }
+            if mixer == "attn":
+                sub["mixer"] = init_attention(kj[2], c.attn_config())
+            else:
+                sub["mixer"] = init_mamba(kj[2], self._mamba_config())
+            if ffn == "moe":
+                sub["ffn"] = init_moe(kj[3], c.moe_config())
+            else:
+                sub["ffn"] = init_mlp(kj[3], c.mlp_config())
+            p[f"sub{j}"] = sub
+        return p
+
+    def _superblock_apply(self, params, h, cache, make_cache: bool):
+        """One superblock (attn_period sublayers, unrolled)."""
+        c = self.cfg
+        kinds = self._sub_kinds()
+        new_cache: Dict[str, Any] = {}
+        aux_total = jnp.zeros((), jnp.float32)
+        for j, (mixer, ffn) in enumerate(kinds):
+            sub = params[f"sub{j}"]
+            sub_cache = cache.get(f"sub{j}") if cache is not None else None
+            x = rms_norm(h, sub["norm1"], c.norm_eps)
+            if mixer == "attn":
+                pos = jnp.zeros((), jnp.int32) if make_cache else None
+                out, mc = attention(sub["mixer"], x, c.attn_config(),
+                                    cache=sub_cache, position=pos)
+            else:
+                out, mc = mamba(sub["mixer"], x, self._mamba_config(),
+                                state=sub_cache)
+                if not (make_cache or cache is not None):
+                    mc = None  # training: discard states
+            h = h + out
+            x = rms_norm(h, sub["norm2"], c.norm_eps)
+            if ffn == "moe":
+                out, aux = moe(sub["ffn"], x, c.moe_config())
+                aux_total = aux_total + aux
+            else:
+                out = mlp(sub["ffn"], x, c.mlp_config())
+            h = h + out
+            if mc is not None:
+                new_cache[f"sub{j}"] = mc
+        return h, (new_cache if new_cache else None), aux_total
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, key: jax.Array):
+        c = self.cfg
+        n_super = c.num_layers // c.attn_period
+        segs = self.segments()
+        keys = jax.random.split(key, len(segs) + 3)
+        params = {
+            "embed": make_param(keys[0], (c.vocab_padded, c.d_model),
+                                ("vocab", "embed"), init="embedding"),
+            "exit_norms": [
+                make_param(keys[1], (c.d_model,), ("embed",), init="ones")
+                for _ in range(c.num_exits)
+            ],
+            "lm_head": make_param(keys[2], (c.d_model, c.vocab_padded),
+                                  ("embed", "vocab")),
+            "segments": [
+                stack_init(self._init_superblock, keys[3 + i], n)
+                for i, n in enumerate(segs)
+            ],
+        }
+        return params
+
+    def abstract(self, key: jax.Array):
+        return abstract_params(self.init, key)
+
+    def segments(self) -> List[int]:
+        """Superblock counts per exit segment."""
+        c = self.cfg
+        bounds = [0] + [e // c.attn_period for e in c.exits]
+        return [b - a for a, b in zip(bounds, bounds[1:])]
+
+    # -- forward ------------------------------------------------------------
+
+    def _run_segment(self, seg_params, h, caches, make_cache: bool):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h, aux = carry
+            sb_params, sb_cache = xs
+            h, new_cache, aux_i = self._superblock_apply(
+                sb_params, h, sb_cache, make_cache
+            )
+            return (h, aux + aux_i), new_cache
+
+        body = _remat_wrap(body, cfg.remat)
+        (h, aux), new_caches = jax.lax.scan(
+            body, (h, jnp.zeros((), jnp.float32)), (seg_params, caches)
+        )
+        return h, new_caches, aux
+
+    def _head(self, values, h, exit_idx):
+        h = rms_norm(h, values["exit_norms"][exit_idx], self.cfg.norm_eps)
+        logits = (h @ values["lm_head"].astype(h.dtype)).astype(jnp.float32)
+        return mask_padded_vocab(logits, self.cfg.vocab_size)
+
+    def train_loss(self, values, batch):
+        c = self.cfg
+        values = cast_floats(values, c.dtype)
+        h = values["embed"][batch["tokens"]].astype(c.dtype)
+        aux_total = jnp.zeros((), jnp.float32)
+        per_exit = []
+        for i in range(len(self.segments())):
+            h, _, aux = self._run_segment(values["segments"][i], h, None, False)
+            aux_total = aux_total + aux
+            logits = self._head(values, h, i)
+            per_exit.append(
+                cross_entropy(logits, batch["labels"], batch.get("mask")))
+        loss = weighted_exit_loss(per_exit, c.exit_weights_) + aux_total
+        return loss, {"loss": loss, "nll_final": per_exit[-1],
+                      "moe_aux": aux_total,
+                      **{f"nll_exit{i}": l for i, l in enumerate(per_exit)}}
+
+    def forward_exit(self, values, batch, exit_idx: int):
+        c = self.cfg
+        values = cast_floats(values, c.dtype)
+        h = values["embed"][batch["tokens"]].astype(c.dtype)
+        for i in range(exit_idx + 1):
+            h, _, _ = self._run_segment(values["segments"][i], h, None, False)
+        return self._head(values, h, exit_idx)
+
+    def prefill(self, values, batch, exit_idx: int):
+        c = self.cfg
+        values = cast_floats(values, c.dtype)
+        h = values["embed"][batch["tokens"]].astype(c.dtype)
+        caches = []
+        for i in range(exit_idx + 1):
+            h, seg_cache, _ = self._run_segment(values["segments"][i], h,
+                                                None, True)
+            caches.append(seg_cache)
+        return self._head(values, h[:, -1:, :], exit_idx), {"segments": caches}
+
+    def decode_step(self, values, token, cache, exit_idx: int):
+        c = self.cfg
+        values = cast_floats(values, c.dtype)
+        h = values["embed"][token].astype(c.dtype)
+        new_caches = []
+        for i in range(exit_idx + 1):
+            h, seg_cache, _ = self._run_segment(
+                values["segments"][i], h, cache["segments"][i], False)
+            new_caches.append(seg_cache)
+        return self._head(values, h, exit_idx), {"segments": new_caches}
+
+    def init_cache(self, batch_size: int, max_len: int, exit_idx: int,
+                   dtype=None) -> dict:
+        c = self.cfg
+        dtype = dtype or c.dtype
+        mcfg = self._mamba_config()
+        kinds = self._sub_kinds()
+        segs = self.segments()
+        out = []
+        for i in range(exit_idx + 1):
+            n = segs[i]
+            sb: Dict[str, Any] = {}
+            for j, (mixer, _) in enumerate(kinds):
+                if mixer == "attn":
+                    sb[f"sub{j}"] = {
+                        "k": jnp.zeros((n, batch_size, max_len,
+                                        c.num_kv_heads, c.head_dim_), dtype),
+                        "v": jnp.zeros((n, batch_size, max_len,
+                                        c.num_kv_heads, c.head_dim_), dtype),
+                        "len": jnp.zeros((n, batch_size), jnp.int32),
+                    }
+                else:
+                    sb[f"sub{j}"] = {
+                        "h": jnp.zeros((n, batch_size, mcfg.d_inner,
+                                        mcfg.d_state), jnp.float32),
+                        "conv": jnp.zeros((n, batch_size, mcfg.d_conv - 1,
+                                           mcfg.d_inner), dtype),
+                    }
+            out.append(sb)
+        return {"segments": out}

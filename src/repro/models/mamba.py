@@ -1,0 +1,123 @@
+"""Mamba-1 selective SSM block (for the Jamba hybrid, arXiv:2403.19887).
+
+Selective state space: per token t,
+
+    h_t = exp(A * dt_t) ⊙ h_{t-1} + dt_t * B_t * x_t     (h in R^{d_in x N})
+    y_t = C_t · h_t + D ⊙ x_t
+
+with input-dependent (selective) dt, B, C. Train/prefill run ``lax.scan``
+over time; decode carries ``h`` and the depthwise-conv window — O(1) state,
+which is why Jamba runs the ``long_500k`` shape with only its sparse
+attention layers holding a KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import Param, make_param
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None  # defaults to ceil(d_model / 16)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def init_mamba(key: jax.Array, cfg: MambaConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.rank
+    # S4D-real initialisation for A (negative real spectrum).
+    a_init = jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                      (di, n)))
+    return {
+        "w_in": make_param(ks[0], (d, 2 * di), ("embed", "mlp")),
+        "conv_w": make_param(ks[1], (cfg.d_conv, di), (None, "mlp"),
+                             scale=1.0 / np.sqrt(cfg.d_conv)),
+        "conv_b": make_param(ks[2], (di,), ("mlp",), init="zeros"),
+        "w_x_dbc": make_param(ks[3], (di, r + 2 * n), ("mlp", None)),
+        "w_dt": make_param(ks[4], (r, di), (None, "mlp")),
+        "dt_bias": make_param(ks[5], (di,), ("mlp",), init="zeros"),
+        "a_log": Param(a_init, ("mlp", None)),
+        "d_skip": make_param(ks[6], (di,), ("mlp",), init="ones"),
+        "w_out": make_param(ks[7], (di, d), ("mlp", "embed")),
+    }
+
+
+def _selective_scan(x, dt, b_t, c_t, a, d_skip, h0):
+    """x, dt: [B, S, Di]; b_t, c_t: [B, S, N]; a: [Di, N]; h0: [B, Di, N]."""
+    bsz, s, di = x.shape
+    n = b_t.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), dtype=jnp.float32)
+
+    def step(h, inputs):
+        x_t, dt_t, bt, ct = inputs            # [B,Di], [B,Di], [B,N], [B,N]
+        da = jnp.exp(dt_t[..., None] * a[None])               # [B, Di, N]
+        h_new = da * h + (dt_t * x_t)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h_new, ct)
+        return h_new, y
+
+    xs = tuple(
+        jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+        for t in (x, dt, b_t, c_t)
+    )
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x.astype(jnp.float32) * d_skip
+    return y, h_final
+
+
+def _causal_conv(x, w, b, window: Optional[jax.Array] = None):
+    """Depthwise causal conv1d. x [B,S,Di], w [K,Di]. window [B,K-1,Di] is the
+    carried left context for decode; None -> zero padding (train/prefill)."""
+    k = w.shape[0]
+    if window is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = window.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                    # [B, S+K-1, Di]
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b, xp[:, -(k - 1):, :]
+
+
+def mamba(
+    params: dict,
+    x: jax.Array,
+    cfg: MambaConfig,
+    state: Optional[dict] = None,
+) -> Tuple[jax.Array, dict]:
+    """Mamba block forward. state = {"h": [B,Di,N], "conv": [B,K-1,Di]}."""
+    xz = x @ params["w_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)                         # [B,S,Di] each
+    conv_state = state["conv"] if state is not None else None
+    h0 = state["h"] if state is not None else None
+
+    xs, new_conv = _causal_conv(xs, params["conv_w"], params["conv_b"],
+                                conv_state)
+    xs = jax.nn.silu(xs)
+
+    dbc = xs @ params["w_x_dbc"]
+    r, n = cfg.rank, cfg.d_state
+    dt_r, b_t, c_t = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["w_dt"] + params["dt_bias"])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))         # [Di, N]
+
+    y, h_final = _selective_scan(xs, dt, b_t, c_t, a, params["d_skip"], h0)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["w_out"]
+    return out, {"h": h_final, "conv": new_conv}

@@ -1,0 +1,185 @@
+"""Feed-forward layers: dense SwiGLU MLP and fine-grained Mixture-of-Experts.
+
+The MoE uses the TPU-standard dispatch/combine einsum formulation
+(Mesh-TensorFlow / Switch / MaxText style): tokens are grouped, each group
+assigns its tokens to per-expert capacity slots via one-hot dispatch
+tensors, expert FFNs run as a single batched einsum sharded over the
+``expert`` logical axis (EP), and results are combined with the routing
+weights. This is dropless up to the capacity factor and — crucially for the
+dry-run — fully expressible as einsums the SPMD partitioner can shard.
+
+DeepSeek specifics implemented: shared experts always active alongside
+routed top-k; optional sigmoid routing with normalised top-k weights
+(DeepSeek-V3) vs softmax routing (DeepSeek-MoE 16B); load-balance auxiliary
+loss (Switch-style, returned for the trainer to add).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import make_param, swiglu
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    gated: bool = True             # SwiGLU (llama family) vs GeLU
+
+
+def init_mlp(key: jax.Array, cfg: MLPConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    p = {
+        "w_up": make_param(ks[0], (d, f), ("embed", "mlp")),
+        "w_down": make_param(ks[1], (f, d), ("mlp", "embed")),
+    }
+    if cfg.gated:
+        p["w_gate"] = make_param(ks[2], (d, f), ("embed", "mlp"))
+    return p
+
+
+def mlp(params: dict, x: jax.Array, cfg: MLPConfig) -> jax.Array:
+    if cfg.gated:
+        h = swiglu(x @ params["w_gate"], x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff_expert: int               # per-expert hidden (fine-grained: small)
+    num_experts: int               # routed experts
+    top_k: int
+    num_shared: int = 0            # always-active shared experts
+    d_ff_shared: Optional[int] = None  # defaults to num_shared * d_ff_expert
+    capacity_factor: float = 1.25
+    router_type: str = "softmax"   # "softmax" (dsmoe) | "sigmoid" (dsv3)
+    aux_loss_weight: float = 0.001
+    group_size: int = 1024         # tokens per dispatch group (bounds the
+                                   # [G, Tg, E, C] dispatch tensor footprint)
+
+    @property
+    def shared_ff(self) -> int:
+        return self.d_ff_shared or self.num_shared * self.d_ff_expert
+
+
+def init_moe(key: jax.Array, cfg: MoEConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.num_experts
+    p = {
+        "router": make_param(ks[0], (d, e), ("embed", "expert"), scale=0.02),
+        # stacked expert FFNs: leading `expert` axis shards over EP
+        "we_gate": make_param(ks[1], (e, d, f), ("expert", "embed", "mlp")),
+        "we_up": make_param(ks[2], (e, d, f), ("expert", "embed", "mlp")),
+        "we_down": make_param(ks[3], (e, f, d), ("expert", "mlp", "embed")),
+    }
+    if cfg.num_shared > 0:
+        fs = cfg.shared_ff
+        p["shared"] = {
+            "w_gate": make_param(ks[4], (d, fs), ("embed", "mlp")),
+            "w_up": make_param(ks[5], (d, fs), ("embed", "mlp")),
+            "w_down": make_param(ks[6], (fs, d), ("mlp", "embed")),
+        }
+    return p
+
+
+def _routing(params, x3d: jax.Array, cfg: MoEConfig):
+    """Grouped token->expert assignment.
+
+    x3d [G, Tg, D] -> (weights [G, Tg, k], idx [G, Tg, k], aux scalar).
+    """
+    logits = (x3d @ params["router"]).astype(jnp.float32)     # [G, Tg, E]
+    if cfg.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        w, idx = jax.lax.top_k(scores, cfg.top_k)
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, cfg.top_k)
+    # Switch-style load-balance loss over the full softmax distribution.
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=(0, 1))                         # [E]
+    one_hot = jax.nn.one_hot(idx[..., 0], cfg.num_experts)    # primary route
+    ce = jnp.mean(one_hot, axis=(0, 1))
+    aux = cfg.num_experts * jnp.sum(me * ce) * cfg.aux_loss_weight
+    return w.astype(x3d.dtype), idx, aux
+
+
+def moe(
+    params: dict, x: jax.Array, cfg: MoEConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """MoE forward. x [B, S, D] (or [T, D]); returns (out, aux_loss).
+
+    Tokens are processed in groups of ``cfg.group_size`` with per-group,
+    per-expert capacity ``C = Tg * k / E * capacity_factor`` (>= 1). Tokens
+    above an expert's capacity within their group are dropped (combine
+    weight zero) — standard Switch semantics; the default capacity factor
+    keeps drops rare. The dispatch tensor is [G, Tg, E, C]: bounded by the
+    group size regardless of global batch, and shardable as
+    (data, -, expert, -) by the SPMD partitioner.
+    """
+    orig_shape = x.shape
+    x2d = x.reshape(-1, cfg.d_model)
+    t = x2d.shape[0]
+    e, k = cfg.num_experts, cfg.top_k
+
+    tg = min(cfg.group_size, t)
+    g = -(-t // tg)                                           # ceil
+    pad = g * tg - t
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    x3d = x2d.reshape(g, tg, cfg.d_model)
+
+    weights, idx, aux = _routing(params, x3d, cfg)
+
+    cap = max(int(tg * k / e * cfg.capacity_factor), 1)
+    # Position of each (token, slot) within its expert's per-group buffer:
+    # cumulative count of prior assignments to the same expert in the group.
+    expert_onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)   # [G, Tg, k, E]
+    flat = expert_onehot.reshape(g, tg * k, e)
+    pos = (jnp.cumsum(flat, axis=1) * flat - 1).reshape(g, tg, k, e)
+
+    # Accumulate dispatch/combine over the k routing slots (Python loop over
+    # k avoids materialising the [G, Tg, k, E, C] intermediate).
+    dispatch = jnp.zeros((g, tg, e, cap), dtype=x2d.dtype)
+    combine = jnp.zeros((g, tg, e, cap), dtype=x2d.dtype)
+    for slot in range(k):
+        p_s = jnp.sum(pos[:, :, slot, :] * expert_onehot[:, :, slot, :], axis=-1)
+        ok = (p_s >= 0) & (p_s < cap)                          # [G, Tg]
+        oh = (
+            jax.nn.one_hot(jnp.clip(p_s, 0, cap - 1), cap, dtype=x2d.dtype)
+            * ok[..., None].astype(x2d.dtype)
+        )                                                      # [G, Tg, C]
+        eh = expert_onehot[:, :, slot, :].astype(x2d.dtype)    # [G, Tg, E]
+        dispatch = dispatch + eh[..., None] * oh[..., None, :]
+        combine = combine + (
+            eh[..., None] * oh[..., None, :] * weights[:, :, slot, None, None]
+        )
+
+    xe = jnp.einsum("gtd,gtec->gecd", x3d, dispatch)          # [G, E, C, D]
+    h = swiglu(
+        jnp.einsum("gecd,edf->gecf", xe, params["we_gate"]),
+        jnp.einsum("gecd,edf->gecf", xe, params["we_up"]),
+    )
+    ye = jnp.einsum("gecf,efd->gecd", h, params["we_down"])   # [G, E, C, D]
+    out = jnp.einsum("gecd,gtec->gtd", ye, combine)           # [G, Tg, D]
+    out = out.reshape(g * tg, cfg.d_model)
+    if pad:
+        out = out[:t]
+
+    if cfg.num_shared > 0:
+        sh = params["shared"]
+        x2d_real = x2d[:t] if pad else x2d
+        out = out + swiglu(
+            x2d_real @ sh["w_gate"], x2d_real @ sh["w_up"]
+        ) @ sh["w_down"]
+
+    return out.reshape(orig_shape), aux

@@ -1,0 +1,207 @@
+"""The paper's own models: early-exit ResNet50/101/152 for CIFAR-100 in pure
+JAX (paper Sec. IV-A).
+
+Faithful structure: CIFAR stem (3x3 conv — the standard CIFAR adaptation of
+the ImageNet 7x7-s2 stem) + four bottleneck stages; a lightweight exit head
+(adaptive average pool + single FC) after each of layer1/layer2/layer3, plus
+the final head after layer4. When inference exits at point e, only the stem,
+stages <= e, and that exit's head execute — exactly the paper's latency
+lever.
+
+Adaptation note (DESIGN.md §2): BatchNorm is replaced by GroupNorm(32) to
+keep the model purely functional (no running-stats state threading); the
+latency profile L(m, e, B) and the exit-head structure are unaffected.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import Param, abstract_params, make_param
+
+STAGE_BLOCKS = {
+    "resnet50": (3, 4, 6, 3),
+    "resnet101": (3, 4, 23, 3),
+    "resnet152": (3, 8, 36, 3),
+}
+STAGE_WIDTH = (64, 128, 256, 512)   # bottleneck base widths; expansion x4
+EXPANSION = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    variant: str = "resnet50"
+    num_classes: int = 100
+    width_multiplier: float = 1.0   # reduced smoke configs use < 1
+    blocks_override: Tuple[int, ...] = ()  # reduced smoke configs
+    groups: int = 8                 # GroupNorm groups
+
+    @property
+    def blocks(self) -> Tuple[int, ...]:
+        return self.blocks_override or STAGE_BLOCKS[self.variant]
+
+    def widths(self) -> List[int]:
+        return [max(int(w * self.width_multiplier), 8) for w in STAGE_WIDTH]
+
+    @property
+    def num_exits(self) -> int:
+        return 4                    # layer1, layer2, layer3, final
+
+
+def _conv(key, k, cin, cout):
+    scale = 1.0 / np.sqrt(k * k * cin)
+    return make_param(key, (k, k, cin, cout), (None, None, None, "heads"),
+                      scale=scale)
+
+
+def conv2d(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def group_norm(x, scale, bias, groups: int, eps=1e-5):
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xg = x.reshape(b, h, w, g, c // g).astype(jnp.float32)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    x = xg.reshape(b, h, w, c)
+    return (x * scale + bias).astype(x.dtype)
+
+
+def _init_norm(key, c):
+    return {
+        "scale": make_param(key, (c,), (None,), init="ones"),
+        "bias": make_param(key, (c,), (None,), init="zeros"),
+    }
+
+
+def _init_bottleneck(key, cin, width, cout, stride):
+    ks = jax.random.split(key, 8)
+    p = {
+        "conv1": _conv(ks[0], 1, cin, width),
+        "n1": _init_norm(ks[1], width),
+        "conv2": _conv(ks[2], 3, width, width),
+        "n2": _init_norm(ks[3], width),
+        "conv3": _conv(ks[4], 1, width, cout),
+        "n3": _init_norm(ks[5], cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv(ks[6], 1, cin, cout)
+        p["nproj"] = _init_norm(ks[7], cout)
+    return p, stride
+
+
+def _bottleneck(params, x, stride, groups):
+    h = conv2d(x, params["conv1"])
+    h = jax.nn.relu(group_norm(h, params["n1"]["scale"], params["n1"]["bias"],
+                               groups))
+    h = conv2d(h, params["conv2"], stride=stride)
+    h = jax.nn.relu(group_norm(h, params["n2"]["scale"], params["n2"]["bias"],
+                               groups))
+    h = conv2d(h, params["conv3"])
+    h = group_norm(h, params["n3"]["scale"], params["n3"]["bias"], groups)
+    if "proj" in params:
+        x = conv2d(x, params["proj"], stride=stride)
+        x = group_norm(x, params["nproj"]["scale"], params["nproj"]["bias"],
+                       groups)
+    return jax.nn.relu(x + h)
+
+
+class EarlyExitResNet:
+    """The paper's model family; exits = (layer1, layer2, layer3, final)."""
+
+    def __init__(self, cfg: ResNetConfig):
+        self.cfg = cfg
+
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        widths = cfg.widths()
+        keys = jax.random.split(key, 16)
+        params: Dict[str, Any] = {
+            "stem": _conv(keys[0], 3, 3, widths[0]),
+            "stem_norm": _init_norm(keys[1], widths[0]),
+        }
+        cin = widths[0]
+        strides_meta = []
+        for s, (n_blocks, width) in enumerate(zip(cfg.blocks, widths)):
+            stage = []
+            stage_meta = []
+            skeys = jax.random.split(keys[2 + s], n_blocks)
+            for b in range(n_blocks):
+                stride = 2 if (b == 0 and s > 0) else 1
+                cout = width * EXPANSION
+                blk, st = _init_bottleneck(skeys[b], cin, width, cout, stride)
+                stage.append(blk)
+                stage_meta.append(st)
+                cin = cout
+            params[f"layer{s + 1}"] = stage
+            strides_meta.append(tuple(stage_meta))
+        self._strides = tuple(strides_meta)
+        # exit heads: pool + single FC from each stage's channels
+        for s in range(4):
+            c_out = widths[s] * EXPANSION
+            params[f"exit_head{s}"] = make_param(
+                keys[8 + s], (c_out, cfg.num_classes), (None, "vocab"))
+        return params
+
+    def _stage_strides(self):
+        cfg = self.cfg
+        return [
+            tuple(2 if (b == 0 and s > 0) else 1 for b in range(n))
+            for s, n in enumerate(cfg.blocks)
+        ]
+
+    def forward_exit(self, values, x: jax.Array, exit_idx: int) -> jax.Array:
+        """x [B, 32, 32, 3] -> logits [B, classes], exiting after stage
+        ``exit_idx`` (0..3). Only the included stages execute."""
+        cfg = self.cfg
+        h = conv2d(x.astype(jnp.float32), values["stem"])
+        h = jax.nn.relu(group_norm(h, values["stem_norm"]["scale"],
+                                   values["stem_norm"]["bias"], cfg.groups))
+        strides = self._stage_strides()
+        for s in range(exit_idx + 1):
+            for b, blk in enumerate(values[f"layer{s + 1}"]):
+                h = _bottleneck(blk, h, strides[s][b], cfg.groups)
+        pooled = h.mean(axis=(1, 2))                      # adaptive avg pool
+        return pooled @ values[f"exit_head{exit_idx}"]
+
+    def train_loss(self, values, batch, exit_weights=(1.0, 1.0, 1.0, 1.0)):
+        """Joint training of all exits (paper Sec. IV-A)."""
+        cfg = self.cfg
+        x, labels = batch["images"], batch["labels"]
+        h = conv2d(x.astype(jnp.float32), values["stem"])
+        h = jax.nn.relu(group_norm(h, values["stem_norm"]["scale"],
+                                   values["stem_norm"]["bias"], cfg.groups))
+        strides = self._stage_strides()
+        losses = []
+        accs = []
+        for s in range(4):
+            for b, blk in enumerate(values[f"layer{s + 1}"]):
+                h = _bottleneck(blk, h, strides[s][b], cfg.groups)
+            logits = h.mean(axis=(1, 2)) @ values[f"exit_head{s}"]
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+            losses.append(nll)
+            accs.append(jnp.mean((jnp.argmax(logits, -1) == labels)))
+        w = jnp.asarray(exit_weights) / np.sum(exit_weights)
+        loss = sum(wi * li for wi, li in zip(w, losses))
+        return loss, {
+            "loss": loss,
+            **{f"nll_exit{i}": l for i, l in enumerate(losses)},
+            **{f"acc_exit{i}": a for i, a in enumerate(accs)},
+        }
+
+    def abstract(self, key: jax.Array):
+        return abstract_params(self.init, key)

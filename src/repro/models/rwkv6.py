@@ -1,0 +1,261 @@
+"""RWKV-6 ("Finch") blocks: attention-free time mixing with data-dependent
+decay (arXiv:2404.05892), plus the RWKV channel-mix FFN.
+
+The WKV recurrence per head (head dim N):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S in R^{N x N})
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with per-token, per-channel decay ``w_t = exp(-exp(w0 + lora_w(x_t)))`` —
+the data-dependent decay that distinguishes RWKV-6 from RWKV-4/5. Training
+and prefill run the recurrence with ``lax.scan`` over time (O(S) sequential,
+O(1) memory per step — this is why the arch runs the ``long_500k`` shape);
+decode is a single step carrying ``S`` — no KV cache exists at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import make_param, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    num_heads: int                 # head_dim = d_model // num_heads
+    d_ff: int
+    lora_rank_decay: int = 64
+    lora_rank_mix: int = 32
+    chunk: int = 0                 # 0 = stepwise scan; >0 = chunked-parallel
+                                   # WKV (HBM traffic / chunk, MXU matmuls)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def init_time_mix(key: jax.Array, cfg: RWKV6Config) -> dict:
+    ks = jax.random.split(key, 16)
+    d, rk = cfg.d_model, cfg.lora_rank_mix
+    p = {
+        # data-dependent interpolation (ddlerp) between x_t and x_{t-1}
+        "maa_x": make_param(ks[0], (d,), (None,), init="zeros"),
+        "maa": make_param(ks[1], (5, d), (None, None), init="zeros"),
+        "mix_a": make_param(ks[2], (d, 5 * rk), ("embed", None), scale=0.01),
+        "mix_b": make_param(ks[3], (5, rk, d), (None, None, "embed"), scale=0.01),
+        # projections
+        "w_r": make_param(ks[4], (d, d), ("embed", "heads")),
+        "w_k": make_param(ks[5], (d, d), ("embed", "heads")),
+        "w_v": make_param(ks[6], (d, d), ("embed", "heads")),
+        "w_g": make_param(ks[7], (d, d), ("embed", "heads")),
+        "w_o": make_param(ks[8], (d, d), ("heads", "embed")),
+        # data-dependent decay (the Finch mechanism)
+        "decay_base": make_param(ks[9], (d,), (None,), init="zeros"),
+        "decay_a": make_param(ks[10], (d, cfg.lora_rank_decay), ("embed", None),
+                              scale=0.01),
+        "decay_b": make_param(ks[11], (cfg.lora_rank_decay, d), (None, "embed"),
+                              scale=0.01),
+        # per-channel bonus u
+        "bonus": make_param(ks[12], (d,), (None,), init="zeros"),
+        # output group-norm (per head)
+        "ln_out": make_param(ks[13], (d,), (None,), init="ones"),
+    }
+    return p
+
+
+def _ddlerp(params, x, sx):
+    """RWKV-6 data-dependent token-shift interpolation.
+
+    x, sx: [B, S, D] current and previous token streams. Returns the five
+    mixed streams (w, k, v, r, g), each [B, S, D].
+    """
+    rk = params["mix_b"].shape[1]
+    xxx = x + (sx - x) * params["maa_x"]
+    lora = jnp.tanh(xxx @ params["mix_a"])            # [B, S, 5*rk]
+    lora = lora.reshape(*lora.shape[:-1], 5, rk)
+    delta = jnp.einsum("bsfr,frd->bsfd", lora, params["mix_b"])  # [B,S,5,D]
+    mixed = []
+    for i in range(5):
+        maa = params["maa"][i] + delta[..., i, :]
+        mixed.append(x + (sx - x) * maa)
+    return mixed
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """Run the WKV recurrence over time.
+
+    r,k,v: [B, S, H, N]; w: [B, S, H, N] decay in (0,1); u: [H, N];
+    state: [B, H, N, N] (or None -> zeros). Returns (out [B,S,H,N], state).
+    """
+    b, s, h, n = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, n, n), dtype=jnp.float32)
+
+    def step(carry, inputs):
+        s_prev = carry
+        r_t, k_t, v_t, w_t = inputs            # [B, H, N] each
+        kv = k_t[..., :, None] * v_t[..., None, :]          # [B,H,N,N]
+        o = jnp.einsum(
+            "bhn,bhnm->bhm",
+            r_t,
+            s_prev + u[None, :, :, None] * kv,
+        )
+        s_new = w_t[..., :, None] * s_prev + kv
+        return s_new, o
+
+    xs = tuple(
+        jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w)
+    )
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1).astype(r.dtype), state
+
+
+def _wkv_chunked(r, k, v, w, u, state, chunk: int):
+    """Chunked-parallel WKV (the GLA/RWKV-6 chunked form).
+
+    Equivalent to the stepwise recurrence, but the per-token [N, N] state
+    round-trip to HBM is replaced by: (i) one state read/write per *chunk*
+    and (ii) intra-chunk interactions as causal [Tc, Tc] matmuls (MXU work
+    instead of HBM traffic). This is the §Perf optimization for the
+    rwkv train/prefill cells: HBM traffic drops by ~chunk, FLOPs shift onto
+    the MXU.
+
+    Stability: decays are diag per channel; products are kept in log space
+    relative to the chunk start and clamped at -60 (contributions decayed
+    below e^-60 are zero in fp32 anyway), so no exponent overflows.
+    """
+    b, s, h, n = r.shape
+    tc = min(chunk, s)
+    assert s % tc == 0, (s, tc)
+    nc = s // tc
+    if state is None:
+        state = jnp.zeros((b, h, n, n), dtype=jnp.float32)
+
+    f32 = jnp.float32
+    rc = jnp.moveaxis(r.astype(f32).reshape(b, nc, tc, h, n), 1, 0)
+    kc = jnp.moveaxis(k.astype(f32).reshape(b, nc, tc, h, n), 1, 0)
+    vc = jnp.moveaxis(v.astype(f32).reshape(b, nc, tc, h, n), 1, 0)
+    wc = jnp.moveaxis(w.astype(f32).reshape(b, nc, tc, h, n), 1, 0)
+
+    def chunk_step(s0, inputs):
+        r_, k_, v_, w_ = inputs                    # [B, Tc, H, N]
+        logw = jnp.log(jnp.maximum(w_, 1e-38))     # <= 0
+        a = jnp.cumsum(logw, axis=1)               # a_t = sum_{i<=t} log w_i
+        a_prev = a - logw                          # a_{t-1} (a_0 = 0)
+        a_prev = jnp.maximum(a_prev, -60.0)
+        a_cl = jnp.maximum(a, -60.0)
+        a_end = a[:, -1:, :, :]                    # [B,1,H,N]
+
+        # cross-chunk: o_t += (r_t * exp(a_{t-1})) @ S0
+        r_dec = r_ * jnp.exp(a_prev)
+        o = jnp.einsum("bthn,bhnm->bthm", r_dec, s0)
+
+        # intra-chunk (strictly causal): scores_ti = sum_n r_t k_i e^{a_{t-1}-a_i}
+        k_dec = k_ * jnp.exp(-a_cl)
+        scores = jnp.einsum("bthn,bihn->bhti", r_dec, k_dec)
+        mask = jnp.tril(jnp.ones((tc, tc), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        o = o + jnp.einsum("bhti,bihm->bthm", scores, v_)
+
+        # diagonal bonus term: r_t (u k_t) v_t
+        diag = jnp.sum(r_ * u[None, None] * k_, axis=-1)   # [B,Tc,H]
+        o = o + diag[..., None] * v_
+
+        # state to next chunk: S = e^{a_T} S0 + sum_i (k_i e^{a_T - a_i}) v_i
+        k_rem = k_ * jnp.exp(jnp.maximum(a_end - a, -60.0))
+        s_new = jnp.exp(jnp.maximum(a_end[:, 0], -60.0))[..., None] * s0 \
+            + jnp.einsum("bihn,bihm->bhnm", k_rem, v_)
+        return s_new, o
+
+    state, out = jax.lax.scan(chunk_step, state, (rc, kc, vc, wc))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, n)
+    return out.astype(r.dtype), state
+
+
+def time_mix(
+    params: dict,
+    x: jax.Array,
+    cfg: RWKV6Config,
+    state: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """RWKV-6 time mixing. state = {"shift": [B,D], "wkv": [B,H,N,N]} for
+    decode; None for train/prefill (shift starts at zeros)."""
+    b, s, d = x.shape
+    h, n = cfg.num_heads, cfg.head_dim
+
+    if state is None:
+        sx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]     # previous token
+        wkv_state = None
+    else:
+        sx = state["shift"][:, None, :]
+        wkv_state = state["wkv"]
+
+    xw, xk, xv, xr, xg = _ddlerp(params, x, sx)
+    r = (xr @ params["w_r"]).reshape(b, s, h, n)
+    k = (xk @ params["w_k"]).reshape(b, s, h, n)
+    v = (xv @ params["w_v"]).reshape(b, s, h, n)
+    g = jax.nn.silu(xg @ params["w_g"])
+
+    # data-dependent decay in (0, 1): exp(-exp(.)) (Finch Eq. section 3)
+    decay_logit = params["decay_base"] + jnp.tanh(
+        xw @ params["decay_a"]
+    ) @ params["decay_b"]
+    w = jnp.exp(-jnp.exp(decay_logit.astype(jnp.float32)))
+    w = w.reshape(b, s, h, n)
+    u = params["bonus"].reshape(h, n)
+
+    if cfg.chunk > 0 and s > 1 and s % min(cfg.chunk, s) == 0:
+        out, wkv_state = _wkv_chunked(r, k, v, w, u, wkv_state,
+                                      chunk=cfg.chunk)
+    else:
+        out, wkv_state = _wkv_scan(r, k, v, w, u, wkv_state)
+    out = out.reshape(b, s, d)
+    # per-head group norm
+    out = out.reshape(b, s, h, n)
+    out = rms_norm(out, jnp.ones((n,), out.dtype))
+    out = out.reshape(b, s, d) * params["ln_out"]
+    out = (out * g) @ params["w_o"]
+
+    new_state = None
+    if state is not None or s >= 1:
+        new_state = {"shift": x[:, -1, :], "wkv": wkv_state}
+    return out, new_state
+
+
+def init_channel_mix(key: jax.Array, cfg: RWKV6Config) -> dict:
+    ks = jax.random.split(key, 5)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "maa_k": make_param(ks[0], (d,), (None,), init="zeros"),
+        "maa_r": make_param(ks[1], (d,), (None,), init="zeros"),
+        "w_k": make_param(ks[2], (d, f), ("embed", "mlp")),
+        "w_v": make_param(ks[3], (f, d), ("mlp", "embed")),
+        "w_r": make_param(ks[4], (d, d), ("embed", "embed_out")),
+    }
+
+
+def channel_mix(
+    params: dict,
+    x: jax.Array,
+    cfg: RWKV6Config,
+    state: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """RWKV channel mixing (squared-ReLU FFN with token shift + r gate).
+    state = {"shift": [B, D]} for decode."""
+    if state is None:
+        sx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        sx = state["shift"][:, None, :]
+    xk = x + (sx - x) * params["maa_k"]
+    xr = x + (sx - x) * params["maa_r"]
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    out = jax.nn.sigmoid(xr @ params["w_r"]) * (k @ params["w_v"])
+    return out, {"shift": x[:, -1, :]}

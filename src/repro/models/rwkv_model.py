@@ -1,0 +1,180 @@
+"""RWKV-6 early-exit LM (attention-free; family == "rwkv").
+
+No KV cache exists: the per-layer state is O(1) in sequence length
+(token-shift vector + WKV matrix state), which is why this arch runs the
+``long_500k`` shape. Early exit truncates the stack — remaining layers'
+state updates are skipped entirely (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    abstract_params,
+    cast_floats,
+    cross_entropy,
+    make_param,
+    mask_padded_vocab,
+    rms_norm,
+    stack_init,
+    weighted_exit_loss,
+)
+from repro.models.rwkv6 import (
+    RWKV6Config,
+    channel_mix,
+    init_channel_mix,
+    init_time_mix,
+    time_mix,
+)
+from repro.models.transformer import LMConfig, _remat_wrap
+
+
+class RWKV6LM:
+    def __init__(self, cfg: LMConfig):
+        assert cfg.family == "rwkv"
+        self.cfg = cfg
+
+    def _rwkv_config(self) -> RWKV6Config:
+        c = self.cfg
+        return RWKV6Config(d_model=c.d_model, num_heads=c.num_heads,
+                           d_ff=c.d_ff, chunk=c.rwkv_chunk)
+
+    def _init_block(self, key: jax.Array) -> dict:
+        c = self.cfg
+        ks = jax.random.split(key, 4)
+        return {
+            "norm1": make_param(ks[0], (c.d_model,), ("embed",), init="ones"),
+            "norm2": make_param(ks[1], (c.d_model,), ("embed",), init="ones"),
+            "tm": init_time_mix(ks[2], self._rwkv_config()),
+            "cm": init_channel_mix(ks[3], self._rwkv_config()),
+        }
+
+    def _block_apply(self, params, h, state, keep_state: bool):
+        c = self.cfg
+        rcfg = self._rwkv_config()
+        tm_state = state.get("tm") if state is not None else None
+        cm_state = state.get("cm") if state is not None else None
+        out, tm_new = time_mix(params["tm"], rms_norm(h, params["norm1"],
+                                                      c.norm_eps),
+                               rcfg, state=tm_state)
+        h = h + out
+        out, cm_new = channel_mix(params["cm"], rms_norm(h, params["norm2"],
+                                                         c.norm_eps),
+                                  rcfg, state=cm_state)
+        h = h + out
+        if keep_state:
+            return h, {"tm": tm_new, "cm": cm_new}
+        return h, None
+
+    # -- init ----------------------------------------------------------------
+
+    def init(self, key: jax.Array):
+        c = self.cfg
+        segs = self.segments()
+        keys = jax.random.split(key, len(segs) + 3)
+        return {
+            "embed": make_param(keys[0], (c.vocab_padded, c.d_model),
+                                ("vocab", "embed"), init="embedding"),
+            "exit_norms": [
+                make_param(keys[1], (c.d_model,), ("embed",), init="ones")
+                for _ in range(c.num_exits)
+            ],
+            "lm_head": make_param(keys[2], (c.d_model, c.vocab_padded),
+                                  ("embed", "vocab")),
+            "segments": [
+                stack_init(self._init_block, keys[3 + i], n)
+                for i, n in enumerate(segs)
+            ],
+        }
+
+    def abstract(self, key: jax.Array):
+        return abstract_params(self.init, key)
+
+    def segments(self) -> List[int]:
+        bounds = [0] + list(self.cfg.exits)
+        return [b - a for a, b in zip(bounds, bounds[1:])]
+
+    # -- forward ---------------------------------------------------------------
+
+    def _run_segment(self, seg_params, h, states, keep_state: bool):
+        def body(carry, xs):
+            layer_params, layer_state = xs
+            h, new_state = self._block_apply(layer_params, carry, layer_state,
+                                             keep_state)
+            return h, new_state
+
+        body = _remat_wrap(body, self.cfg.remat)
+        h, new_states = jax.lax.scan(body, h, (seg_params, states))
+        return h, new_states
+
+    def _head(self, values, h, exit_idx):
+        h = rms_norm(h, values["exit_norms"][exit_idx], self.cfg.norm_eps)
+        logits = (h @ values["lm_head"].astype(h.dtype)).astype(jnp.float32)
+        return mask_padded_vocab(logits, self.cfg.vocab_size)
+
+    def train_loss(self, values, batch):
+        c = self.cfg
+        values = cast_floats(values, c.dtype)
+        h = values["embed"][batch["tokens"]].astype(c.dtype)
+        per_exit = []
+        for i in range(len(self.segments())):
+            h, _ = self._run_segment(values["segments"][i], h, None, False)
+            per_exit.append(cross_entropy(self._head(values, h, i),
+                                          batch["labels"], batch.get("mask")))
+        loss = weighted_exit_loss(per_exit, c.exit_weights_)
+        return loss, {"loss": loss, "nll_final": per_exit[-1],
+                      **{f"nll_exit{i}": l for i, l in enumerate(per_exit)}}
+
+    def forward_exit(self, values, batch, exit_idx: int):
+        c = self.cfg
+        values = cast_floats(values, c.dtype)
+        h = values["embed"][batch["tokens"]].astype(c.dtype)
+        for i in range(exit_idx + 1):
+            h, _ = self._run_segment(values["segments"][i], h, None, False)
+        return self._head(values, h, exit_idx)
+
+    def prefill(self, values, batch, exit_idx: int):
+        c = self.cfg
+        values = cast_floats(values, c.dtype)
+        h = values["embed"][batch["tokens"]].astype(c.dtype)
+        states = []
+        for i in range(exit_idx + 1):
+            h, st = self._run_segment(values["segments"][i], h, None, True)
+            states.append(st)
+        return self._head(values, h[:, -1:, :], exit_idx), {"segments": states}
+
+    def decode_step(self, values, token, cache, exit_idx: int):
+        c = self.cfg
+        values = cast_floats(values, c.dtype)
+        h = values["embed"][token].astype(c.dtype)
+        new_states = []
+        for i in range(exit_idx + 1):
+            h, st = self._run_segment(values["segments"][i], h,
+                                      cache["segments"][i], True)
+            new_states.append(st)
+        return self._head(values, h, exit_idx), {"segments": new_states}
+
+    def init_cache(self, batch_size: int, max_len: int, exit_idx: int,
+                   dtype=None) -> dict:
+        """State template. ``max_len`` is ignored — RWKV state is O(1)."""
+        c = self.cfg
+        dtype = dtype or c.dtype
+        rcfg = self._rwkv_config()
+        out = []
+        for n_layers in self.segments()[: exit_idx + 1]:
+            out.append({
+                "tm": {
+                    "shift": jnp.zeros((n_layers, batch_size, c.d_model), dtype),
+                    "wkv": jnp.zeros((n_layers, batch_size, c.num_heads,
+                                      rcfg.head_dim, rcfg.head_dim),
+                                     jnp.float32),
+                },
+                "cm": {
+                    "shift": jnp.zeros((n_layers, batch_size, c.d_model), dtype),
+                },
+            })
+        return {"segments": out}

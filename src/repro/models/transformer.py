@@ -1,0 +1,495 @@
+"""Decoder-only LM assembly with scheduler-controlled early exits.
+
+This is the early-exit substrate for the assigned LM architectures: the
+decoder stack is split into *segments* at the exit boundaries; each segment
+is a stack of identical blocks consumed by ``lax.scan`` (compile time and
+HLO size O(#segments), not O(depth) — essential for the 512-device
+dry-run). An exit head (per-exit RMSNorm + shared unembedding) sits at each
+boundary.
+
+Hardware adaptation of the paper's exit heads (DESIGN.md §2): on ResNets
+each exit head is a full pooled classifier; for LMs a per-exit ``[D, V]``
+head would add billions of parameters (V up to 200k), so exits share the
+unembedding matrix and own only their norm — the latency lever (skipping
+the remaining layers) is identical.
+
+Families covered here: dense GQA (qwen3 / smollm / starcoder2 / phi4 /
+mistral-llava) and MoE with optional MLA (deepseek-moe-16b, deepseek-v3).
+Jamba / RWKV / enc-dec live in sibling modules and share the segment +
+exit-head machinery through the same LMConfig.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    AttentionConfig,
+    MLAConfig,
+    attention,
+    init_attention,
+    init_mla,
+    mla_attention,
+    mla_attention_absorbed,
+)
+from repro.models.common import (
+    Param,
+    abstract_params,
+    cast_floats,
+    cross_entropy,
+    make_param,
+    mask_padded_vocab,
+    rms_norm,
+    split_params,
+    stack_init,
+    weighted_exit_loss,
+)
+from repro.models.moe import MLPConfig, MoEConfig, init_mlp, init_moe, mlp, moe
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    """One config type for every assigned LM architecture."""
+
+    arch_id: str
+    family: str                    # dense | moe | rwkv | jamba | encdec
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    exits: Tuple[int, ...]         # cumulative layer counts; last == num_layers
+    head_dim: Optional[int] = None  # defaults to d_model // num_heads
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    mlp_gated: bool = True         # SwiGLU; starcoder2 uses plain GeLU
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.float32
+    exit_loss_weights: Optional[Tuple[float, ...]] = None  # default: uniform
+    remat: str = "none"            # none | dots | full (segment scan body)
+
+    # MoE (family == "moe", or jamba's interleaved MoE)
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    d_ff_expert: int = 0
+    moe_router: str = "softmax"
+    dense_prefix: int = 0          # leading dense layers (deepseek: 1 / 3)
+    moe_group_size: int = 1024
+    moe_capacity_factor: float = 1.25
+
+    # MLA (deepseek-v3)
+    mla: bool = False
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    # rwkv (§Perf: chunked-parallel WKV; 0 = stepwise scan baseline)
+    rwkv_chunk: int = 0
+
+    # MLA decode in absorbed-matrix form (§Perf; see attention.py)
+    mla_absorbed_decode: bool = False
+
+    # pad vocab so embedding/head shard over the model axis (§Perf;
+    # 0 = no padding). Logits at padded slots are masked to -inf.
+    vocab_pad_multiple: int = 0
+
+    # hybrid (jamba)
+    attn_period: int = 0           # every Nth layer is attention (jamba: 8)
+    attn_offset: int = 0           # index within the period
+    moe_period: int = 0            # every Nth layer is MoE (jamba: 2)
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+
+    # enc-dec (seamless)
+    num_encoder_layers: int = 0
+
+    # modality frontend stub: "none" | "audio" | "vision"
+    frontend: str = "none"
+    frontend_seq: int = 0          # frames/patches per example for stubs
+
+    def __post_init__(self):
+        assert self.exits, "at least one exit required"
+        assert self.exits[-1] == self.num_layers, (
+            "deepest exit must be the full stack"
+        )
+        assert tuple(sorted(set(self.exits))) == tuple(self.exits)
+        if self.family == "moe":
+            assert all(e > self.dense_prefix for e in self.exits), (
+                "exits must land in the MoE region"
+            )
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up so embedding/head shard cleanly (§Perf)."""
+        m = self.vocab_pad_multiple
+        if not m:
+            return self.vocab_size
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def num_exits(self) -> int:
+        return len(self.exits)
+
+    @property
+    def exit_weights_(self) -> Tuple[float, ...]:
+        return self.exit_loss_weights or tuple([1.0] * len(self.exits))
+
+    def attn_config(self) -> AttentionConfig:
+        return AttentionConfig(
+            d_model=self.d_model,
+            num_heads=self.num_heads,
+            num_kv_heads=self.num_kv_heads,
+            head_dim=self.head_dim_,
+            rope_theta=self.rope_theta,
+            qk_norm=self.qk_norm,
+        )
+
+    def mla_config(self) -> MLAConfig:
+        return MLAConfig(
+            d_model=self.d_model,
+            num_heads=self.num_heads,
+            q_lora_rank=self.q_lora_rank,
+            kv_lora_rank=self.kv_lora_rank,
+            qk_nope_head_dim=self.qk_nope_head_dim,
+            qk_rope_head_dim=self.qk_rope_head_dim,
+            v_head_dim=self.v_head_dim,
+            rope_theta=self.rope_theta,
+        )
+
+    def mlp_config(self) -> MLPConfig:
+        return MLPConfig(d_model=self.d_model, d_ff=self.d_ff,
+                         gated=self.mlp_gated)
+
+    def moe_config(self) -> MoEConfig:
+        return MoEConfig(
+            d_model=self.d_model,
+            d_ff_expert=self.d_ff_expert,
+            num_experts=self.num_experts,
+            top_k=self.top_k,
+            num_shared=self.num_shared_experts,
+            router_type=self.moe_router,
+            group_size=self.moe_group_size,
+            capacity_factor=self.moe_capacity_factor,
+        )
+
+    # -- segment plan --------------------------------------------------------
+
+    def segments(self) -> List[Tuple[str, int, int]]:
+        """[(kind, start_layer, end_layer)] split at exit boundaries and at
+        the dense-prefix/MoE boundary. kind in {"dense", "moe"}."""
+        bounds = [0]
+        if self.dense_prefix:
+            bounds.append(self.dense_prefix)
+        bounds.extend(self.exits)
+        bounds = sorted(set(bounds))
+        segs = []
+        for a, b in zip(bounds, bounds[1:]):
+            kind = "dense" if (self.family != "moe" or b <= self.dense_prefix) \
+                else "moe"
+            segs.append((kind, a, b))
+        return segs
+
+    def exit_segment_index(self, exit_idx: int) -> int:
+        """Number of segments to run (inclusive) for a given exit."""
+        target = self.exits[exit_idx]
+        for i, (_, _, end) in enumerate(self.segments()):
+            if end == target:
+                return i + 1
+        raise ValueError(f"exit {exit_idx} not on a segment boundary")
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _init_block(key: jax.Array, cfg: LMConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm1": make_param(ks[0], (cfg.d_model,), ("embed",), init="ones"),
+        "norm2": make_param(ks[1], (cfg.d_model,), ("embed",), init="ones"),
+    }
+    if cfg.mla:
+        p["attn"] = init_mla(ks[2], cfg.mla_config())
+    else:
+        p["attn"] = init_attention(ks[2], cfg.attn_config())
+    if kind == "moe":
+        p["ffn"] = init_moe(ks[3], cfg.moe_config())
+    else:
+        p["ffn"] = init_mlp(ks[3], cfg.mlp_config())
+    return p
+
+
+def _block_apply(
+    params: dict,
+    h: jax.Array,
+    cfg: LMConfig,
+    kind: str,
+    cache: Optional[dict],
+    make_cache: bool,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """One pre-norm block. Returns (h, new_cache, aux_loss)."""
+    attn_in = rms_norm(h, params["norm1"], cfg.norm_eps)
+    pos = jnp.zeros((), jnp.int32) if make_cache else None
+    if cfg.mla and cfg.mla_absorbed_decode and cache is not None:
+        attn_out, new_cache = mla_attention_absorbed(
+            params["attn"], attn_in, cfg.mla_config(), cache=cache
+        )
+    elif cfg.mla:
+        attn_out, new_cache = mla_attention(
+            params["attn"], attn_in, cfg.mla_config(), cache=cache, position=pos
+        )
+    else:
+        attn_out, new_cache = attention(
+            params["attn"], attn_in, cfg.attn_config(), cache=cache, position=pos
+        )
+    h = h + attn_out
+    ffn_in = rms_norm(h, params["norm2"], cfg.norm_eps)
+    if kind == "moe":
+        ffn_out, aux = moe(params["ffn"], ffn_in, cfg.moe_config())
+    else:
+        ffn_out, aux = mlp(params["ffn"], ffn_in, cfg.mlp_config()), jnp.zeros(
+            (), jnp.float32
+        )
+    return h + ffn_out, new_cache, aux
+
+
+def _remat_wrap(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+class DecoderLM:
+    """Early-exit decoder LM (dense & MoE families)."""
+
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+
+    # -- init ------------------------------------------------------------
+
+    def init(self, key: jax.Array):
+        """Returns a Param tree (use split_params for values/axes)."""
+        cfg = self.cfg
+        segs = cfg.segments()
+        keys = jax.random.split(key, len(segs) + 3)
+        params: Dict[str, Any] = {
+            "embed": make_param(
+                keys[0], (cfg.vocab_padded, cfg.d_model), ("vocab", "embed"),
+                init="embedding",
+            ),
+            "exit_norms": [
+                make_param(keys[1], (cfg.d_model,), ("embed",), init="ones")
+                for _ in range(cfg.num_exits)
+            ],
+            "segments": [
+                stack_init(
+                    functools.partial(_init_block, cfg=cfg, kind=kind),
+                    keys[3 + i],
+                    end - start,
+                )
+                for i, (kind, start, end) in enumerate(segs)
+            ],
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = make_param(
+                keys[2], (cfg.d_model, cfg.vocab_padded), ("embed", "vocab")
+            )
+        return params
+
+    def abstract(self, key: jax.Array):
+        return abstract_params(self.init, key)
+
+    # -- helpers -----------------------------------------------------------
+
+    def _embed(self, values, batch) -> jax.Array:
+        if "embeds" in batch:  # modality frontend stub output (vlm/audio)
+            return batch["embeds"].astype(self.cfg.dtype)
+        return values["embed"][batch["tokens"]].astype(self.cfg.dtype)
+
+    def _head(self, values, h: jax.Array, exit_idx: int) -> jax.Array:
+        cfg = self.cfg
+        h = rms_norm(h, values["exit_norms"][exit_idx], cfg.norm_eps)
+        w = (
+            values["embed"].T
+            if cfg.tie_embeddings
+            else values["lm_head"]
+        )
+        logits = (h @ w.astype(h.dtype)).astype(jnp.float32)
+        return mask_padded_vocab(logits, cfg.vocab_size)
+
+    def _run_segment(
+        self,
+        seg_params,
+        kind: str,
+        h: jax.Array,
+        caches: Optional[dict],
+        make_cache: bool,
+    ):
+        """Scan one stacked segment. caches: stacked per-layer cache or None.
+
+        Returns (h, stacked_new_caches_or_None, aux_sum).
+        """
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h, aux = carry
+            layer_params, layer_cache = xs
+            h, new_cache, aux_i = _block_apply(
+                layer_params, h, cfg, kind, layer_cache, make_cache
+            )
+            return (h, aux + aux_i), new_cache
+
+        body = _remat_wrap(body, cfg.remat)
+        (h, aux), new_caches = jax.lax.scan(
+            body, (h, jnp.zeros((), jnp.float32)), (seg_params, caches)
+        )
+        return h, new_caches, aux
+
+    # -- training ----------------------------------------------------------
+
+    def train_loss(self, values, batch) -> Tuple[jax.Array, dict]:
+        """Joint early-exit LM loss (weighted per-exit CE + MoE aux)."""
+        cfg = self.cfg
+        values = cast_floats(values, cfg.dtype)
+        h = self._embed(values, batch)
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        segs = cfg.segments()
+        exit_bounds = {cfg.exits[i]: i for i in range(cfg.num_exits)}
+
+        aux_total = jnp.zeros((), jnp.float32)
+        per_exit_nll = []
+        for i, (kind, start, end) in enumerate(segs):
+            h, _, aux = self._run_segment(values["segments"][i], kind, h,
+                                          None, make_cache=False)
+            aux_total = aux_total + aux
+            if end in exit_bounds:
+                e = exit_bounds[end]
+                logits = self._head(values, h, e)
+                per_exit_nll.append(cross_entropy(logits, labels, mask))
+
+        loss = weighted_exit_loss(per_exit_nll, cfg.exit_weights_) + aux_total
+        metrics = {
+            "loss": loss,
+            "nll_final": per_exit_nll[-1],
+            "moe_aux": aux_total,
+            **{f"nll_exit{i}": l for i, l in enumerate(per_exit_nll)},
+        }
+        return loss, metrics
+
+    # -- serving -----------------------------------------------------------
+
+    def forward_exit(self, values, batch, exit_idx: int) -> jax.Array:
+        """Run layers up to ``exits[exit_idx]`` and that exit's head.
+
+        The (m, e, B) unit the paper's profile table measures.
+        """
+        cfg = self.cfg
+        values = cast_floats(values, cfg.dtype)
+        h = self._embed(values, batch)
+        n_segs = cfg.exit_segment_index(exit_idx)
+        segs = cfg.segments()
+        for i in range(n_segs):
+            kind, _, _ = segs[i]
+            h, _, _ = self._run_segment(values["segments"][i], kind, h,
+                                        None, make_cache=False)
+        return self._head(values, h, exit_idx)
+
+    def prefill(self, values, batch, exit_idx: int):
+        """Prefill through exit ``exit_idx``: logits for the last position +
+        per-segment stacked KV caches (sized to the prompt)."""
+        cfg = self.cfg
+        values = cast_floats(values, cfg.dtype)
+        h = self._embed(values, batch)
+        n_segs = cfg.exit_segment_index(exit_idx)
+        segs = cfg.segments()
+        caches = []
+        for i in range(n_segs):
+            kind, _, _ = segs[i]
+            h, seg_cache, _ = self._run_segment(
+                values["segments"][i], kind, h, None, make_cache=True
+            )
+            caches.append(seg_cache)
+        logits = self._head(values, h[:, -1:, :], exit_idx)
+        return logits, {"segments": caches}
+
+    def decode_step(self, values, token: jax.Array, cache: dict, exit_idx: int):
+        """One decode step. token [B, 1] int32 (or [B,1,D] embeds).
+
+        cache = {"segments": [stacked per segment]}; lengths live inside the
+        per-layer caches. Returns (logits [B,1,V], new cache).
+        """
+        cfg = self.cfg
+        values = cast_floats(values, cfg.dtype)
+        if token.ndim == 3:
+            h = token.astype(cfg.dtype)
+        else:
+            h = values["embed"][token].astype(cfg.dtype)
+        n_segs = cfg.exit_segment_index(exit_idx)
+        segs = cfg.segments()
+        new_caches = []
+        for i in range(n_segs):
+            kind, _, _ = segs[i]
+            h, seg_cache, _ = self._run_segment(
+                values["segments"][i], kind, h, cache["segments"][i],
+                make_cache=False,
+            )
+            new_caches.append(seg_cache)
+        logits = self._head(values, h, exit_idx)
+        return logits, {"segments": new_caches}
+
+    def init_cache(self, batch_size: int, max_len: int, exit_idx: int,
+                   dtype=None) -> dict:
+        """Zero-filled decode cache pytree (also the dry-run ShapeDtypeStruct
+        template for ``decode_*`` shapes)."""
+        cfg = self.cfg
+        dtype = dtype or cfg.dtype
+        n_segs = cfg.exit_segment_index(exit_idx)
+        segs = cfg.segments()
+        caches = []
+        for i in range(n_segs):
+            _, start, end = segs[i]
+            n = end - start
+            if cfg.mla:
+                c = {
+                    "c_kv": jnp.zeros(
+                        (n, batch_size, max_len, cfg.kv_lora_rank), dtype),
+                    "k_pe": jnp.zeros(
+                        (n, batch_size, max_len, cfg.qk_rope_head_dim), dtype),
+                    "len": jnp.zeros((n, batch_size), jnp.int32),
+                }
+            else:
+                c = {
+                    "k": jnp.zeros(
+                        (n, batch_size, max_len, cfg.num_kv_heads,
+                         cfg.head_dim_), dtype),
+                    "v": jnp.zeros(
+                        (n, batch_size, max_len, cfg.num_kv_heads,
+                         cfg.head_dim_), dtype),
+                    "len": jnp.zeros((n, batch_size), jnp.int32),
+                }
+            caches.append(c)
+        return {"segments": caches}

@@ -1,0 +1,25 @@
+"""Pure-JAX optimizers with shardable state (no optax dependency)."""
+
+from repro.optim.optimizers import (
+    AdamW,
+    Adafactor,
+    OptState,
+    Optimizer,
+    SGD,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    make_optimizer,
+)
+
+__all__ = [
+    "AdamW",
+    "Adafactor",
+    "OptState",
+    "Optimizer",
+    "SGD",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "global_norm",
+    "make_optimizer",
+]

@@ -1,0 +1,127 @@
+"""Multi-replica traffic router: the `pod` axis of the serving mesh.
+
+Each pod (or pod slice) runs an independent EdgeServing instance — the
+paper's single-accelerator scheduler is the intra-replica brain; this
+router is the inter-replica layer that makes it a 1000+-node system:
+
+  * **capacity-weighted routing**: requests are routed by weighted
+    least-loaded (expected backlog drain time / straggler-scaled capacity),
+    which generalises join-shortest-queue to heterogeneous replica speeds;
+  * **straggler awareness**: replica capacity weights come from
+    ``StragglerPolicy`` EWMA multipliers (observed/expected quantum time),
+    so degraded hardware automatically sheds load and detached replicas
+    receive none;
+  * **locality stickiness**: an optional key (e.g. session id) maps to a
+    preferred replica by rendezvous hashing; the router only overrides the
+    preference when the preferred replica's backlog exceeds the best one by
+    ``spill_factor`` — bounded-load consistent hashing.
+
+The router is deliberately stateless w.r.t. request contents: it reads
+only queue backlogs and capacity weights, both O(replicas) to maintain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.profile import ProfileTable
+from repro.runtime.fault_tolerance import StragglerPolicy
+
+
+@dataclasses.dataclass
+class ReplicaState:
+    """Router-visible state of one serving replica (one pod slice)."""
+
+    backlog_s: float = 0.0        # expected time to drain current queues
+    healthy: bool = True
+
+
+class ReplicaRouter:
+    def __init__(
+        self,
+        num_replicas: int,
+        straggler: Optional[StragglerPolicy] = None,
+        spill_factor: float = 2.0,
+    ):
+        assert num_replicas >= 1
+        self.replicas = [ReplicaState() for _ in range(num_replicas)]
+        self.straggler = straggler or StragglerPolicy(num_replicas)
+        self.spill_factor = spill_factor
+
+    # -- state ingestion ------------------------------------------------------
+
+    def update_backlog(self, replica: int, expected_drain_s: float) -> None:
+        self.replicas[replica].backlog_s = expected_drain_s
+
+    def observe_quantum(self, replica: int, observed_s: float,
+                        expected_s: float) -> None:
+        """Feed per-quantum timing into the straggler EWMA."""
+        self.straggler.observe(replica, observed_s, expected_s)
+        healthy = set(self.straggler.healthy())
+        for i, r in enumerate(self.replicas):
+            r.healthy = i in healthy
+
+    @staticmethod
+    def backlog_from_queues(table: ProfileTable, qlens: Sequence[int],
+                            exit_idx: Optional[int] = None,
+                            max_batch: int = 10) -> float:
+        """Expected drain time of a replica's queues at full batches
+        (the router's cheap load signal; final exit = conservative)."""
+        e = table.num_exits - 1 if exit_idx is None else exit_idx
+        total = 0.0
+        for m, n in enumerate(qlens):
+            full, rem = divmod(n, max_batch)
+            total += full * table(m, e, max_batch)
+            if rem:
+                total += table(m, e, rem)
+        return total
+
+    # -- routing ---------------------------------------------------------------
+
+    def _effective_backlog(self, i: int) -> float:
+        """Backlog scaled by the straggler multiplier (slow replica ->
+        its queued work takes proportionally longer to drain)."""
+        return self.replicas[i].backlog_s * float(
+            self.straggler.multipliers[i])
+
+    def route(self, key: Optional[str] = None) -> int:
+        """Pick a replica for one request.
+
+        Without a key: weighted least-loaded among healthy replicas.
+        With a key: rendezvous-hash preference, spilled to the least-loaded
+        replica only when the preferred one is ``spill_factor``x worse.
+        """
+        healthy = [i for i, r in enumerate(self.replicas) if r.healthy]
+        if not healthy:  # total failure: degrade to round-robin over all
+            healthy = list(range(len(self.replicas)))
+        best = min(healthy, key=self._effective_backlog)
+        if key is None:
+            return best
+        preferred = max(
+            healthy,
+            key=lambda i: hashlib.blake2b(
+                f"{key}|{i}".encode(), digest_size=8).digest(),
+        )
+        pref_load = self._effective_backlog(preferred)
+        best_load = self._effective_backlog(best)
+        if pref_load <= self.spill_factor * max(best_load, 1e-9):
+            return preferred
+        return best
+
+    def route_batch(self, n: int, key_prefix: Optional[str] = None) -> List[int]:
+        """Route n requests, refreshing the load view greedily per request
+        (each assignment bumps the chosen replica's backlog estimate by its
+        mean service share so a burst spreads instead of dogpiling)."""
+        out = []
+        if not any(r.healthy for r in self.replicas):
+            return [i % len(self.replicas) for i in range(n)]
+        mean_quantum = 1e-3
+        for j in range(n):
+            i = self.route(f"{key_prefix}:{j}" if key_prefix else None)
+            out.append(i)
+            self.replicas[i].backlog_s += mean_quantum
+        return out

@@ -1,0 +1,176 @@
+"""Live serving engine: the paper's "GPU runtime" on a real accelerator.
+
+Time-division execution of M early-exit models behind FIFO queues, driven
+by any ``repro.core`` scheduler. The engine shares queues/snapshot/metrics
+code with the simulator — the only difference is that service time comes
+from executing the jitted ``forward_exit`` on the device instead of the
+profile table.
+
+Offline phase  = ``measure_profile`` (wall-clock profile of every
+(m, e, B) — one compiled executable per cell, exactly the paper's 120-cell
+table), then ``ServingEngine.run`` is the online phase.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import summarize
+from repro.core.profile import ProfileTable
+from repro.core.queues import QueueSnapshot, ServiceQueue
+from repro.core.request import Completion, Request
+from repro.core.scheduler import Scheduler
+
+
+@dataclasses.dataclass
+class ServedModel:
+    """One deployed early-exit model: forward_fn(values, data, exit_idx) ->
+    outputs; data_fn(batch_size) -> input payload batch."""
+
+    name: str
+    values: Any
+    forward_fn: Callable[[Any, Any, int], Any]
+    data_fn: Callable[[int], Any]
+    num_exits: int
+
+
+def measure_profile(
+    models: Sequence[ServedModel],
+    batch_sizes: Sequence[int],
+    exit_names: Optional[Sequence[str]] = None,
+    accuracy: Optional[np.ndarray] = None,
+    repeats: int = 10,
+    warmup: int = 2,
+    percentile: float = 95.0,
+) -> ProfileTable:
+    """Offline profiling phase (paper Sec. IV-B) against the live device."""
+    compiled: Dict[Tuple[int, int, int], Callable] = {}
+
+    def run_fn(m: int, e: int, b: int):
+        key = (m, e, b)
+        if key not in compiled:
+            mod = models[m]
+            fn = jax.jit(
+                lambda v, x, _e=e, _mod=mod: _mod.forward_fn(v, x, _e))
+            compiled[key] = fn
+        mod = models[m]
+        out = compiled[key](mod.values, mod.data_fn(b))
+        jax.block_until_ready(out)
+
+    n_exits = models[0].num_exits
+    return ProfileTable.measure(
+        [m.name for m in models],
+        exit_names or [f"exit{i}" for i in range(n_exits)],
+        list(batch_sizes),
+        run_fn,
+        accuracy=accuracy,
+        repeats=repeats,
+        warmup=warmup,
+        percentile=percentile,
+        meta={"platform": jax.devices()[0].platform},
+    )
+
+
+class ServingEngine:
+    """Online serving loop (paper Sec. III "Online Serving Phase")."""
+
+    def __init__(
+        self,
+        models: Sequence[ServedModel],
+        scheduler: Scheduler,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.models = list(models)
+        self.scheduler = scheduler
+        self.clock = clock
+        self.queues = [ServiceQueue(m) for m in range(len(models))]
+        self.completions: List[Completion] = []
+        self.dropped = 0
+        self._compiled: Dict[Tuple[int, int, int], Callable] = {}
+        self._busy_s = 0.0
+
+    # -- ingress ---------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queues[req.model].push(req)
+
+    # -- execution ---------------------------------------------------------------
+
+    def _execute(self, m: int, e: int, b: int):
+        key = (m, e, b)
+        if key not in self._compiled:
+            mod = self.models[m]
+            self._compiled[key] = jax.jit(
+                lambda v, x, _e=e, _mod=mod: _mod.forward_fn(v, x, _e))
+        mod = self.models[m]
+        out = self._compiled[key](mod.values, mod.data_fn(b))
+        jax.block_until_ready(out)
+        return out
+
+    def warmup(self, batch_sizes: Sequence[int]) -> None:
+        """Pre-compile every (m, e, B) so online serving never JITs."""
+        for m, mod in enumerate(self.models):
+            for e in range(mod.num_exits):
+                for b in batch_sizes:
+                    self._execute(m, e, b)
+
+    def run(
+        self,
+        arrivals: Sequence[Request],
+        duration: float,
+        drain: bool = True,
+        idle_sleep: float = 1e-4,
+    ) -> "tuple[list[Completion], float]":
+        """Serve a pre-generated arrival trace in real time.
+
+        Arrival times in the trace are relative to loop start; requests are
+        enqueued when the wall clock passes them (paper: requests arrive
+        continuously, regardless of accelerator state).
+        """
+        t0 = self.clock()
+        next_arr = 0
+        n = len(arrivals)
+        while True:
+            now = self.clock() - t0
+            while next_arr < n and arrivals[next_arr].arrival <= now:
+                self.submit(arrivals[next_arr])
+                next_arr += 1
+            if now > duration and next_arr >= n:
+                if not drain or all(len(q) == 0 for q in self.queues):
+                    break
+            snapshot = QueueSnapshot.take(self.queues, now)
+            for m, cnt in self.scheduler.prune(snapshot):
+                self.dropped += len(self.queues[m].pop_batch(cnt))
+            decision = self.scheduler.decide(snapshot)
+            if decision is None:
+                time.sleep(idle_sleep)
+                continue
+            batch = self.queues[decision.model].pop_batch(decision.batch_size)
+            t_dispatch = self.clock() - t0
+            self._execute(decision.model, decision.exit_idx,
+                          decision.batch_size)
+            t_done = self.clock() - t0
+            self._busy_s += t_done - t_dispatch
+            for req in batch:
+                self.completions.append(Completion(
+                    req_id=req.req_id, model=req.model, arrival=req.arrival,
+                    dispatch=t_dispatch, finish=t_done,
+                    exit_idx=decision.exit_idx,
+                    batch_size=decision.batch_size,
+                ))
+        return self.completions, self.clock() - t0
+
+    def metrics(self, table: ProfileTable, slo: float, span: float,
+                warmup_tasks: int = 0):
+        return summarize(
+            self.completions, table, slo, warmup_tasks=warmup_tasks,
+            busy_time=self._busy_s, span=span,
+            residual_queue=sum(len(q) for q in self.queues),
+            dropped=self.dropped,
+        )

@@ -1,0 +1,145 @@
+"""Training step assembly: value_and_grad + clipping + optimizer, with
+gradient accumulation, optional int8 gradient compression (error feedback),
+and sharding helpers for optimizer state.
+
+The returned ``train_step(values, opt_state, batch, step_no)`` is a pure
+function ready for ``jax.jit`` with donated params/opt-state buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import (
+    ShardingRules,
+    param_shardings,
+    spec_for_param,
+)
+from repro.optim import Adafactor, AdamW, Optimizer, clip_by_global_norm
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    grad_clip: float = 1.0
+    grad_accum: int = 1            # microbatches per step (scan-accumulated)
+    compress_grads: bool = False   # int8 + error feedback (see collectives)
+
+
+def make_train_step(
+    model,
+    optimizer: Optimizer,
+    grad_clip: float = 1.0,
+    grad_accum: int = 1,
+) -> Callable:
+    """Build the jit-able train step.
+
+    With ``grad_accum > 1`` the global batch is split along dim 0 into
+    microbatches consumed by ``lax.scan`` — activation memory drops by the
+    accumulation factor while keeping the same global batch semantics.
+    """
+
+    def loss_fn(values, batch):
+        loss, metrics = model.train_loss(values, batch)
+        return loss, metrics
+
+    def train_step(values, opt_state, batch, step_no):
+        if grad_accum <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(values, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    values, mb)
+                return (
+                    jax.tree.map(lambda a, b: a + b, g_acc, g),
+                    l_acc + l,
+                ), None
+
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                    *x.shape[1:]),
+                batch,
+            )
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), values)
+            (grads, loss_sum), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), mb_batch)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss_sum / grad_accum
+            metrics = {"loss": loss}
+
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        new_values, new_opt = optimizer.step(values, grads, opt_state, step_no)
+        metrics = {**metrics, "grad_norm": gnorm}
+        return new_values, new_opt, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state sharding
+# ---------------------------------------------------------------------------
+
+def opt_state_shardings(
+    opt: Optimizer,
+    param_shapes: PyTree,
+    axes_tree: PyTree,
+    rules: ShardingRules,
+    mesh: Mesh,
+):
+    """NamedSharding tree for an optimizer state.
+
+    AdamW moments mirror the params exactly; Adafactor's factored
+    accumulators drop one dim — the matching logical axis is dropped from
+    the spec by shape alignment.
+    """
+    state_shapes = jax.eval_shape(opt.init, param_shapes)
+
+    flat_params, _ = jax.tree.flatten(param_shapes)
+    flat_axes = jax.tree.leaves(
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+    shape_to_axes = {}
+    for p, a in zip(flat_params, flat_axes):
+        shape_to_axes.setdefault(p.shape, a)
+
+    def spec_by_shape(s):
+        shape = s.shape
+        if shape in shape_to_axes:
+            axes = shape_to_axes[shape]
+            return NamedSharding(mesh,
+                                 spec_for_param(shape, axes, rules, mesh))
+        # factored accumulator: find a param shape it was reduced from
+        for pshape, axes in shape_to_axes.items():
+            if len(pshape) != len(shape) + 1:
+                continue
+            for drop in range(len(pshape)):
+                if tuple(d for i, d in enumerate(pshape) if i != drop) == shape:
+                    sub_axes = tuple(a for i, a in enumerate(axes) if i != drop)
+                    return NamedSharding(
+                        mesh, spec_for_param(shape, sub_axes, rules, mesh))
+        return NamedSharding(mesh, P())  # scalar counters etc.
+
+    return jax.tree.map(spec_by_shape, state_shapes)
+
+
+def abstract_opt_state(opt: Optimizer, param_shapes: PyTree) -> PyTree:
+    return jax.eval_shape(opt.init, param_shapes)
+
+
+def pick_optimizer_for(cfg, lr: float = 3e-4) -> Optimizer:
+    """Adafactor for >=50B params (factored state is what fits in HBM);
+    AdamW otherwise."""
+    big = cfg.arch_id in ("deepseek-v3-671b", "jamba-v0.1-52b")
+    return Adafactor(lr=lr) if big else AdamW(lr=lr)

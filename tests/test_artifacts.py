@@ -1,0 +1,95 @@
+"""Validate the dry-run/roofline artifact pipeline.
+
+The matrix itself is produced by ``repro.launch.dryrun`` (a separate
+process: it must own the 512-device XLA flag). These tests check (i) the
+analysis code on synthetic records and (ii), when the artifacts exist in
+the repo, that the full matrix is present, error-free, and covers every
+assigned cell on both meshes.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, all_configs, applicable
+from repro.launch.roofline import analyze_record, fmt_s
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "dryrun")
+
+
+def synthetic_record():
+    return {
+        "arch": "qwen3-8b", "shape": "train_4k", "kind": "train",
+        "mesh": [16, 16], "mesh_axes": ["data", "model"],
+        "num_devices": 256, "rules": "train-fsdp",
+        "hlo_metrics": {"flops": 1e14, "bytes": 1e12},
+        "collectives": {"bytes": {"total": 5e10}},
+        "model_flops": 5.3e16,
+        "bytes_per_device_static": 4e8,
+        "serve_variant": "baseline",
+    }
+
+
+class TestRooflineAnalysis:
+    def test_terms_and_dominance(self):
+        r = analyze_record(synthetic_record())
+        assert r["compute_s"] == pytest.approx(1e14 / 197e12)
+        assert r["memory_s"] == pytest.approx(1e12 / 819e9)
+        assert r["collective_s"] == pytest.approx(5e10 / 50e9)
+        assert r["dominant"] == "memory"
+        assert r["t_star"] == r["memory_s"]
+
+    def test_roofline_fraction_definition(self):
+        r = analyze_record(synthetic_record())
+        ideal = (5.3e16 / 256) / 197e12
+        assert r["roofline_frac"] == pytest.approx(ideal / r["t_star"])
+        assert 0 < r["roofline_frac"] < 1
+
+    def test_skipped_and_error_records_pass_through(self):
+        assert analyze_record({"skipped": "reason"}) is None
+        assert analyze_record({"error": "trace"}) is None
+
+    def test_fmt_s(self):
+        assert fmt_s(2.5) == "2.50s"
+        assert fmt_s(2.5e-3) == "2.50ms"
+        assert fmt_s(2.5e-6) == "2.5us"
+
+
+@pytest.mark.skipif(not os.path.isdir(ARTIFACTS),
+                    reason="dry-run artifacts not generated")
+class TestDryRunMatrix:
+    @pytest.mark.parametrize("mesh", ["single", "multi"])
+    def test_matrix_complete_and_green(self, mesh):
+        d = os.path.join(ARTIFACTS, mesh)
+        assert os.path.isdir(d), f"missing {mesh} artifacts"
+        cfgs = all_configs()
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                path = os.path.join(d, f"{arch}__{shape}.json")
+                assert os.path.exists(path), (arch, shape, mesh)
+                with open(path) as f:
+                    rec = json.load(f)
+                assert "error" not in rec, (arch, shape, mesh)
+                if applicable(cfgs[arch], shape):
+                    assert rec["hlo_metrics"]["flops"] > 0, (arch, shape)
+                    assert rec["num_devices"] == (512 if mesh == "multi"
+                                                  else 256)
+                else:
+                    assert "skipped" in rec
+
+    def test_multi_pod_uses_pod_axis(self):
+        path = os.path.join(ARTIFACTS, "multi", "qwen3-8b__train_4k.json")
+        with open(path) as f:
+            rec = json.load(f)
+        assert rec["mesh_axes"] == ["pod", "data", "model"]
+        assert rec["mesh"] == [2, 16, 16]
+
+    def test_dsv3_train_fits_v5e(self):
+        path = os.path.join(ARTIFACTS, "single",
+                            "deepseek-v3-671b__train_4k.json")
+        with open(path) as f:
+            rec = json.load(f)
+        # 671B params + adafactor + FSDP: must fit in 16 GB v5e HBM
+        assert rec["bytes_per_device_static"] < 16 * 2**30

@@ -1,0 +1,184 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, assert output shapes + no NaNs. FULL configs are
+structure-checked only (exercised via the dry-run, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (
+    ARCH_IDS,
+    SHAPES,
+    all_configs,
+    applicable,
+    get_config,
+    input_specs,
+    skip_reason,
+)
+from repro.models import build_model, split_params
+
+
+def smoke_batch(cfg, batch=2, seq=8):
+    ks = jax.random.split(jax.random.key(7), 3)
+    toks = jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size)
+    b = {"tokens": toks, "labels": toks}
+    if cfg.family == "encdec":
+        b["src_embeds"] = jax.random.normal(
+            ks[1], (batch, cfg.frontend_seq, cfg.d_model))
+    if cfg.frontend == "vision":
+        b = {"embeds": jax.random.normal(ks[2], (batch, seq, cfg.d_model)),
+             "labels": toks}
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestSmokePerArch:
+    def test_train_step(self, arch):
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        values, _ = split_params(model.init(jax.random.key(0)))
+        batch = smoke_batch(cfg)
+        loss, metrics = jax.jit(model.train_loss)(values, batch)
+        assert np.isfinite(float(loss)), arch
+        assert all(np.isfinite(float(v)) for v in metrics.values())
+
+    def test_forward_all_exits(self, arch):
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        values, _ = split_params(model.init(jax.random.key(0)))
+        batch = smoke_batch(cfg)
+        for e in range(cfg.num_exits):
+            logits = model.forward_exit(values, batch, e)
+            assert logits.shape == (2, 8, cfg.vocab_size), (arch, e)
+            assert bool(jnp.all(jnp.isfinite(logits))), (arch, e)
+
+    def test_decode_step(self, arch):
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        values, _ = split_params(model.init(jax.random.key(0)))
+        e = cfg.num_exits - 1
+        if cfg.family == "encdec":
+            src = jax.random.normal(jax.random.key(1),
+                                    (2, cfg.frontend_seq, cfg.d_model))
+            cache = model.prepare_decode_cache(values, src, 2, 12, e)
+        else:
+            cache = model.init_cache(2, 12, e)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        logits, cache2 = jax.jit(
+            lambda v, t, c: model.decode_step(v, t, c, e)
+        )(values, tok, cache)
+        assert logits.shape == (2, 1, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+class TestFullConfigStructure:
+    """FULL configs: exact dims from the assignment (no allocation)."""
+
+    EXPECT = {
+        "seamless-m4t-large-v2": dict(num_layers=24, d_model=1024,
+                                      num_heads=16, num_kv_heads=16,
+                                      d_ff=8192, vocab_size=256206),
+        "qwen3-8b": dict(num_layers=36, d_model=4096, num_heads=32,
+                         num_kv_heads=8, d_ff=12288, vocab_size=151936),
+        "smollm-135m": dict(num_layers=30, d_model=576, num_heads=9,
+                            num_kv_heads=3, d_ff=1536, vocab_size=49152),
+        "starcoder2-7b": dict(num_layers=32, d_model=4608, num_heads=36,
+                              num_kv_heads=4, d_ff=18432, vocab_size=49152),
+        "phi4-mini-3.8b": dict(num_layers=32, d_model=3072, num_heads=24,
+                               num_kv_heads=8, d_ff=8192, vocab_size=200064),
+        "deepseek-moe-16b": dict(num_layers=28, d_model=2048, num_heads=16,
+                                 num_kv_heads=16, vocab_size=102400,
+                                 num_experts=64, top_k=6,
+                                 num_shared_experts=2, d_ff_expert=1408),
+        "deepseek-v3-671b": dict(num_layers=61, d_model=7168, num_heads=128,
+                                 vocab_size=129280, num_experts=256, top_k=8,
+                                 num_shared_experts=1, d_ff_expert=2048,
+                                 mla=True),
+        "llava-next-mistral-7b": dict(num_layers=32, d_model=4096,
+                                      num_heads=32, num_kv_heads=8,
+                                      d_ff=14336, vocab_size=32000),
+        "rwkv6-1.6b": dict(num_layers=24, d_model=2048, d_ff=7168,
+                           vocab_size=65536, family="rwkv"),
+        "jamba-v0.1-52b": dict(num_layers=32, d_model=4096, num_heads=32,
+                               num_kv_heads=8, d_ff=14336, num_experts=16,
+                               top_k=2, attn_period=8),
+    }
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_dims_match_assignment(self, arch):
+        cfg = get_config(arch, smoke=False)
+        for field, want in self.EXPECT[arch].items():
+            assert getattr(cfg, field) == want, (arch, field)
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_four_exits_and_final_is_full_depth(self, arch):
+        cfg = get_config(arch, smoke=False)
+        assert 2 <= cfg.num_exits <= 4
+        assert cfg.exits[-1] == cfg.num_layers
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_abstract_param_count(self, arch):
+        # eval_shape init (no allocation even for 671B) + sanity on scale.
+        cfg = get_config(arch, smoke=False)
+        model = build_model(cfg)
+        shapes, axes = model.abstract(jax.random.key(0))
+        n_params = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+        expected_range = {
+            "smollm-135m": (0.1e9, 0.3e9),
+            "qwen3-8b": (7e9, 10e9),
+            "starcoder2-7b": (6.5e9, 9e9),
+            "phi4-mini-3.8b": (3.4e9, 5.5e9),
+            "llava-next-mistral-7b": (6.5e9, 8.5e9),
+            "deepseek-moe-16b": (14e9, 20e9),
+            "deepseek-v3-671b": (600e9, 720e9),
+            "rwkv6-1.6b": (1.3e9, 2.2e9),
+            "jamba-v0.1-52b": (45e9, 60e9),
+            "seamless-m4t-large-v2": (1.2e9, 2.8e9),
+        }[arch]
+        assert expected_range[0] <= n_params <= expected_range[1], (
+            arch, f"{n_params/1e9:.2f}B"
+        )
+
+
+class TestShapes:
+    def test_shape_table(self):
+        assert SHAPES["train_4k"].seq_len == 4096
+        assert SHAPES["train_4k"].global_batch == 256
+        assert SHAPES["prefill_32k"].seq_len == 32768
+        assert SHAPES["decode_32k"].global_batch == 128
+        assert SHAPES["long_500k"].seq_len == 524288
+
+    def test_long_500k_applicability(self):
+        cfgs = all_configs()
+        runs = [a for a, c in cfgs.items() if applicable(c, "long_500k")]
+        assert sorted(runs) == ["jamba-v0.1-52b", "rwkv6-1.6b"]
+        assert skip_reason(cfgs["qwen3-8b"], "long_500k") is not None
+
+    def test_total_cells(self):
+        # 10 archs x 4 shapes - 8 long_500k skips = 32 dry-run cells.
+        cells = [
+            (a, s)
+            for a, c in all_configs().items()
+            for s in SHAPES
+            if applicable(c, s)
+        ]
+        assert len(cells) == 32
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_input_specs_no_alloc(self, arch):
+        cfg = get_config(arch, smoke=False)
+        for shape in SHAPES:
+            if not applicable(cfg, shape):
+                continue
+            kind, kw = input_specs(cfg, shape)
+            leaves = jax.tree.leaves(kw)
+            assert all(
+                isinstance(l, jax.ShapeDtypeStruct) or np.isscalar(l)
+                for l in leaves
+            ), (arch, shape)
+            if kind == "train":
+                tokens = kw["batch"].get("tokens", kw["batch"].get("embeds"))
+                assert tokens.shape[0] == SHAPES[shape].global_batch
+            if kind == "decode":
+                assert kw["token"].shape == (SHAPES[shape].global_batch, 1)

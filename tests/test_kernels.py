@@ -1,0 +1,201 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs the pure-jnp
+ref.py oracle (assert_allclose), plus hypothesis property checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.exit_head.ops import exit_head
+from repro.kernels.exit_head.ref import confidence_from, exit_head_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.stability_score.ops import stability_scores
+from repro.kernels.stability_score.ref import stability_scores_ref
+
+TOL = {jnp.float32: dict(rtol=2e-3, atol=2e-3),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,h,kh,s,d", [
+        (2, 4, 2, 128, 64),
+        (1, 8, 2, 256, 32),
+        (1, 2, 2, 64, 128),
+        (2, 2, 1, 192, 64),     # uneven-ish: s multiple of blocks only
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_allclose_sweep(self, b, h, kh, s, d, dtype, causal):
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+        k = jax.random.normal(ks[1], (b, kh, s, d), dtype)
+        v = jax.random.normal(ks[2], (b, kh, s, d), dtype)
+        out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                              interpret=True)
+        ref = flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            **TOL[dtype])
+
+    def test_block_shape_invariance(self):
+        ks = jax.random.split(jax.random.key(1), 3)
+        q = jax.random.normal(ks[0], (1, 4, 256, 64))
+        k = jax.random.normal(ks[1], (1, 2, 256, 64))
+        v = jax.random.normal(ks[2], (1, 2, 256, 64))
+        outs = [
+            np.asarray(flash_attention(q, k, v, block_q=bq, block_k=bk,
+                                       interpret=True))
+            for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(outs[0], o, rtol=1e-5, atol=1e-5)
+
+    def test_causal_first_row_attends_self_only(self):
+        # row 0 of a causal attention equals v[0] exactly (softmax of one).
+        ks = jax.random.split(jax.random.key(2), 3)
+        q = jax.random.normal(ks[0], (1, 2, 64, 32))
+        k = jax.random.normal(ks[1], (1, 2, 64, 32))
+        v = jax.random.normal(ks[2], (1, 2, 64, 32))
+        out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                              interpret=True)
+        np.testing.assert_allclose(np.asarray(out[0, :, 0]),
+                                   np.asarray(v[0, :, 0]), rtol=1e-5)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,h,kh,s,d,bs", [
+        (2, 4, 2, 256, 64, 64),
+        (1, 8, 4, 512, 128, 128),
+        (3, 2, 1, 128, 32, 128),
+        (1, 16, 2, 1024, 64, 256),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_allclose_sweep(self, b, h, kh, s, d, bs, dtype):
+        ks = jax.random.split(jax.random.key(3), 4)
+        q = jax.random.normal(ks[0], (b, h, d), dtype)
+        k = jax.random.normal(ks[1], (b, kh, s, d), dtype)
+        v = jax.random.normal(ks[2], (b, kh, s, d), dtype)
+        lens = jax.random.randint(ks[3], (b,), 1, s + 1)
+        out = decode_attention(q, k, v, lens, block_s=bs, interpret=True)
+        ref = decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            **TOL[dtype])
+
+    def test_length_one_returns_first_value(self):
+        ks = jax.random.split(jax.random.key(4), 3)
+        q = jax.random.normal(ks[0], (1, 2, 32))
+        k = jax.random.normal(ks[1], (1, 2, 64, 32))
+        v = jax.random.normal(ks[2], (1, 2, 64, 32))
+        out = decode_attention(q, k, v, jnp.array([1]), block_s=32,
+                               interpret=True)
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(v[0, :, 0]),
+                                   rtol=1e-5)
+
+    def test_cache_tail_is_ignored(self):
+        # garbage beyond `lengths` must not affect the result.
+        ks = jax.random.split(jax.random.key(5), 3)
+        q = jax.random.normal(ks[0], (1, 2, 32))
+        k = jax.random.normal(ks[1], (1, 2, 128, 32))
+        v = jax.random.normal(ks[2], (1, 2, 128, 32))
+        lens = jnp.array([40])
+        out1 = decode_attention(q, k, v, lens, block_s=64, interpret=True)
+        k2 = k.at[:, :, 40:].set(1e4)
+        v2 = v.at[:, :, 40:].set(-1e4)
+        out2 = decode_attention(q, k2, v2, lens, block_s=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   rtol=1e-5)
+
+
+class TestExitHead:
+    @pytest.mark.parametrize("t,d,v,bt,bv", [
+        (8, 64, 512, 8, 128),
+        (16, 128, 1024, 8, 256),
+        (4, 32, 256, 4, 256),
+        (32, 256, 2048, 16, 512),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_allclose_sweep(self, t, d, v, bt, bv, dtype):
+        ks = jax.random.split(jax.random.key(6), 3)
+        h = jax.random.normal(ks[0], (t, d), dtype)
+        g = (jax.random.normal(ks[1], (d,)) * 0.1 + 1.0).astype(dtype)
+        w = (jax.random.normal(ks[2], (d, v)) / np.sqrt(d)).astype(dtype)
+        idx, mx, lse = exit_head(h, g, w, block_t=bt, block_v=bv,
+                                 interpret=True)
+        ridx, rmx, rlse = exit_head_ref(h, g, w)
+        tol = TOL[dtype]
+        np.testing.assert_allclose(np.asarray(mx), np.asarray(rmx), **tol)
+        np.testing.assert_allclose(np.asarray(lse), np.asarray(rlse), **tol)
+        if dtype == jnp.float32:
+            np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+
+    def test_confidence_is_probability(self):
+        ks = jax.random.split(jax.random.key(7), 3)
+        h = jax.random.normal(ks[0], (8, 64))
+        g = jnp.ones((64,))
+        w = jax.random.normal(ks[2], (64, 512)) * 0.2
+        _, mx, lse = exit_head(h, g, w, block_t=8, block_v=128,
+                               interpret=True)
+        conf = np.asarray(confidence_from(mx, lse))
+        assert np.all(conf > 0) and np.all(conf <= 1 + 1e-6)
+
+
+class TestStabilityScoreKernel:
+    @pytest.mark.parametrize("m,q,bm", [(3, 16, 8), (8, 64, 4), (5, 33, 2),
+                                        (16, 128, 8)])
+    def test_allclose_sweep(self, m, q, bm):
+        rng = np.random.default_rng(m * 100 + q)
+        w = jnp.asarray(np.sort(rng.uniform(0, 0.1, (m, q)))[:, ::-1].copy(),
+                        jnp.float32)
+        mask = jnp.asarray((rng.uniform(size=(m, q)) > 0.3), jnp.float32)
+        lat = jnp.asarray(rng.uniform(1e-3, 2e-2, m), jnp.float32)
+        bat = jnp.asarray(rng.integers(1, 5, m), jnp.int32)
+        out = stability_scores(w, mask, lat, bat, tau=0.05, block_m=bm,
+                               interpret=True)
+        ref = stability_scores_ref(w, mask, lat, bat, 0.05, 10.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5)
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=15, deadline=None)
+    def test_property_matches_scheduler_reference(self, seed):
+        rng = np.random.default_rng(seed)
+        m = int(rng.integers(2, 6))
+        q = int(rng.integers(4, 24))
+        w = jnp.asarray(np.sort(rng.uniform(0, 0.2, (m, q)))[:, ::-1].copy(),
+                        jnp.float32)
+        mask = jnp.asarray((rng.uniform(size=(m, q)) > 0.2), jnp.float32)
+        lat = jnp.asarray(rng.uniform(1e-3, 3e-2, m), jnp.float32)
+        bat = jnp.asarray(rng.integers(1, q + 1, m), jnp.int32)
+        out = stability_scores(w, mask, lat, bat, tau=0.05, interpret=True)
+        ref = stability_scores_ref(w, mask, lat, bat, 0.05, 10.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4)
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("t,d,bt", [(8, 64, 8), (32, 512, 8),
+                                        (64, 1024, 32), (16, 96, 16)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_allclose_sweep(self, t, d, bt, dtype):
+        x = jax.random.normal(jax.random.key(8), (t, d), dtype)
+        g = (jax.random.normal(jax.random.key(9), (d,)) * 0.2 + 1.0).astype(
+            dtype)
+        out = rmsnorm(x, g, block_t=bt, interpret=True)
+        ref = rmsnorm_ref(x, g, 1e-6)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            **TOL[dtype])
+
+    def test_unit_rows_unchanged(self):
+        d = 128
+        x = jnp.ones((8, d))
+        out = rmsnorm(x, jnp.ones((d,)), block_t=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5)

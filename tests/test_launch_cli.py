@@ -1,0 +1,58 @@
+"""CLI driver smoke tests (launch/serve.py, launch/train.py plumbing)."""
+
+import subprocess
+import sys
+
+import pytest
+
+
+def run_cli(args, timeout=420):
+    return subprocess.run(
+        [sys.executable, "-m"] + args,
+        capture_output=True, text=True, timeout=timeout,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+        cwd=".",
+    )
+
+
+class TestServeCLI:
+    def test_single_scheduler(self):
+        r = run_cli(["repro.launch.serve", "--scheduler", "edgeserving",
+                     "--lam", "100", "--horizon", "3"])
+        assert r.returncode == 0, r.stderr[-800:]
+        assert "edgeserving" in r.stdout
+        assert "P95=" in r.stdout
+
+    def test_platform_jetson(self):
+        r = run_cli(["repro.launch.serve", "--scheduler", "edgeserving",
+                     "--platform", "jetson", "--slo-ms", "100",
+                     "--lam", "20", "--horizon", "3"])
+        assert r.returncode == 0, r.stderr[-800:]
+
+
+class TestTrainCLI:
+    def test_smoke_train_with_resume(self, tmp_path):
+        ckpt = str(tmp_path / "ck")
+        r = run_cli(["repro.launch.train", "--arch", "smollm-135m",
+                     "--smoke", "--steps", "6", "--batch", "2",
+                     "--seq", "16", "--checkpoint-dir", ckpt,
+                     "--checkpoint-every", "3"])
+        assert r.returncode == 0, r.stderr[-800:]
+        assert "loss=" in r.stdout
+        r2 = run_cli(["repro.launch.train", "--arch", "smollm-135m",
+                      "--smoke", "--steps", "8", "--batch", "2",
+                      "--seq", "16", "--checkpoint-dir", ckpt, "--resume"])
+        assert r2.returncode == 0, r2.stderr[-800:]
+        assert "resumed from step" in r2.stdout
+
+
+class TestDryRunCLI:
+    def test_list_cells(self):
+        r = run_cli(["repro.launch.dryrun", "--list"])
+        assert r.returncode == 0, r.stderr[-800:]
+        # 40 rows: 32 runnable + 8 skips with reasons
+        lines = [l for l in r.stdout.splitlines() if l.startswith("(")]
+        assert len(lines) == 40
+        assert sum("long_500k" in l and "full-attention" in l
+                   for l in lines) == 8

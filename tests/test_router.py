@@ -1,0 +1,91 @@
+"""Tests for the multi-replica traffic router (the serving `pod` axis)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ProfileTable
+from repro.runtime.fault_tolerance import StragglerPolicy
+from repro.runtime.router import ReplicaRouter
+
+
+class TestRouting:
+    def test_least_loaded_wins(self):
+        r = ReplicaRouter(3)
+        r.update_backlog(0, 0.5)
+        r.update_backlog(1, 0.1)
+        r.update_backlog(2, 0.3)
+        assert r.route() == 1
+
+    def test_straggler_scales_load(self):
+        # equal backlog, but replica 0 runs 4x slow -> route elsewhere
+        r = ReplicaRouter(2, straggler=StragglerPolicy(2, alpha=1.0))
+        r.update_backlog(0, 0.2)
+        r.update_backlog(1, 0.2)
+        r.observe_quantum(0, observed_s=0.4, expected_s=0.1)
+        assert r.route() == 1
+
+    def test_detached_replica_gets_nothing(self):
+        r = ReplicaRouter(2, straggler=StragglerPolicy(2, alpha=1.0))
+        r.update_backlog(0, 0.0)   # idle but 10x slow -> detached
+        r.update_backlog(1, 5.0)
+        r.observe_quantum(0, observed_s=1.0, expected_s=0.1)
+        assert r.route() == 1
+
+    def test_all_failed_degrades_gracefully(self):
+        r = ReplicaRouter(2, straggler=StragglerPolicy(2, alpha=1.0))
+        for i in range(2):
+            r.observe_quantum(i, observed_s=1.0, expected_s=0.1)
+        assert r.route() in (0, 1)  # still routes somewhere
+
+    def test_sticky_key_prefers_home(self):
+        r = ReplicaRouter(4)
+        for i in range(4):
+            r.update_backlog(i, 0.1)
+        homes = {r.route(key=f"session-{k}") for k in range(64)}
+        assert len(homes) > 1  # rendezvous spreads sessions
+        # deterministic stickiness
+        assert r.route(key="session-1") == r.route(key="session-1")
+
+    def test_sticky_key_spills_under_overload(self):
+        r = ReplicaRouter(2, spill_factor=2.0)
+        home = ReplicaRouter(2).route(key="s")  # same hash, same home
+        r.update_backlog(home, 10.0)
+        r.update_backlog(1 - home, 0.1)
+        assert r.route(key="s") == 1 - home
+
+    def test_route_batch_spreads_burst(self):
+        r = ReplicaRouter(4)
+        for i in range(4):
+            r.update_backlog(i, 0.0)
+        picks = r.route_batch(400)
+        counts = np.bincount(picks, minlength=4)
+        assert counts.min() > 50  # no replica starved, no dogpile
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=25, deadline=None)
+    def test_property_routes_only_healthy(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(2, 6))
+        r = ReplicaRouter(n, straggler=StragglerPolicy(n, alpha=1.0))
+        for i in range(n):
+            r.update_backlog(i, float(rng.uniform(0, 1)))
+        bad = int(rng.integers(0, n))
+        r.observe_quantum(bad, observed_s=1.0, expected_s=0.05)
+        if len(r.straggler.healthy()) > 0:
+            for _ in range(10):
+                assert r.route() != bad
+
+
+class TestBacklogEstimate:
+    def test_full_batches_plus_remainder(self):
+        table = ProfileTable.paper_rtx3080()
+        qlens = [25, 0, 7]
+        est = ReplicaRouter.backlog_from_queues(table, qlens, max_batch=10)
+        expect = (2 * table(0, 3, 10) + table(0, 3, 5)) + table(2, 3, 7)
+        assert est == pytest.approx(expect)
+
+    def test_empty_queues_zero(self):
+        table = ProfileTable.paper_rtx3080()
+        assert ReplicaRouter.backlog_from_queues(table, [0, 0, 0]) == 0.0

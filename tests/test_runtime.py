@@ -1,0 +1,256 @@
+"""Runtime-substrate tests: optimizers, checkpointing (atomic/async/restore),
+fault tolerance, gradient compression, sharding rules."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.distributed.collectives import (
+    dequantize_int8,
+    quantize_int8,
+    quantize_tree,
+)
+from repro.distributed.sharding import (
+    sanitize_spec,
+    serve_rules,
+    serve_rules_ep_wide,
+    spec_for_param,
+    train_rules,
+)
+from repro.optim import (
+    Adafactor,
+    AdamW,
+    SGD,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+)
+from repro.runtime.checkpoint import Checkpointer
+from repro.runtime.fault_tolerance import (
+    ElasticMesh,
+    PreemptionGuard,
+    StragglerPolicy,
+)
+from jax.sharding import PartitionSpec as P
+
+
+class TestOptimizers:
+    def _quad(self, opt, steps=200):
+        # minimise ||x - 3||^2 over a small pytree
+        params = {"a": jnp.zeros((4,)), "b": {"c": jnp.zeros((2, 3))}}
+        target = jax.tree.map(lambda p: jnp.full(p.shape, 3.0), params)
+        state = opt.init(params)
+        for i in range(steps):
+            grads = jax.tree.map(lambda p, t: 2 * (p - t), params, target)
+            params, state = opt.step(params, grads, state, i)
+        err = max(
+            float(jnp.max(jnp.abs(p - t)))
+            for p, t in zip(jax.tree.leaves(params), jax.tree.leaves(target))
+        )
+        return err
+
+    def test_sgd_converges(self):
+        assert self._quad(SGD(lr=0.05, momentum=0.5)) < 1e-2
+
+    def test_adamw_converges(self):
+        assert self._quad(AdamW(lr=0.1, weight_decay=0.0), 300) < 1e-2
+
+    def test_adafactor_converges(self):
+        assert self._quad(Adafactor(lr=0.3), 400) < 5e-2
+
+    def test_adafactor_state_is_factored(self):
+        p = {"w": jnp.zeros((256, 512)), "b": jnp.zeros((7,))}
+        opt = Adafactor(min_dim_size_to_factor=128)
+        st_ = opt.init(p)
+        assert set(st_["v"]["w"]) == {"vr", "vc"}
+        assert st_["v"]["w"]["vr"].shape == (256,)
+        assert st_["v"]["w"]["vc"].shape == (512,)
+        assert st_["v"]["b"]["v"].shape == (7,)  # small/1D: unfactored
+
+    def test_adafactor_state_bytes_much_smaller(self):
+        p = {"w": jnp.zeros((1024, 1024))}
+        adam_bytes = sum(x.nbytes for x in jax.tree.leaves(AdamW().init(p)))
+        fact_bytes = sum(x.nbytes for x in jax.tree.leaves(
+            Adafactor().init(p)))
+        assert fact_bytes < adam_bytes / 100
+
+    def test_clip_by_global_norm(self):
+        tree = {"a": jnp.full((10,), 10.0)}
+        clipped, norm = clip_by_global_norm(tree, 1.0)
+        assert float(norm) == pytest.approx(np.sqrt(1000.0), rel=1e-5)
+        assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_cosine_schedule_shape(self):
+        lr = cosine_schedule(1e-3, warmup=10, total=100)
+        assert float(lr(0)) == 0.0
+        assert float(lr(10)) == pytest.approx(1e-3)
+        assert float(lr(100)) == pytest.approx(1e-4, rel=1e-2)
+
+    def test_mixed_dtype_params_preserved(self):
+        p = {"w": jnp.zeros((8, 8), jnp.bfloat16)}
+        opt = AdamW(lr=1e-2)
+        s = opt.init(p)
+        g = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+        p2, _ = opt.step(p, g, s, 0)
+        assert p2["w"].dtype == jnp.bfloat16
+
+
+class TestGradCompression:
+    def test_quantize_roundtrip_error_bounded(self):
+        x = jax.random.normal(jax.random.key(0), (128,)) * 5
+        q, scale = quantize_int8(x)
+        err = jnp.max(jnp.abs(dequantize_int8(q, scale) - x))
+        assert float(err) <= float(scale) / 2 + 1e-6
+
+    def test_error_feedback_accumulates(self):
+        grads = {"w": jnp.full((16,), 0.001)}
+        deq, scales, resid = quantize_tree(grads, None)
+        # residual + dequantised == original
+        np.testing.assert_allclose(
+            np.asarray(deq["w"], np.float64) + np.asarray(resid["w"]),
+            np.asarray(grads["w"], np.float64), rtol=1e-6)
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=20, deadline=None)
+    def test_property_feedback_unbiased_over_steps(self, seed):
+        # With constant gradients, error feedback makes the *cumulative*
+        # applied update converge to the true cumulative gradient.
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.normal(size=(32,)) * 1e-3, jnp.float32)
+        applied = jnp.zeros_like(g)
+        resid = None
+        steps = 50
+        for _ in range(steps):
+            deq, _, resid = quantize_tree({"g": g}, resid)
+            applied = applied + deq["g"]
+        np.testing.assert_allclose(
+            np.asarray(applied) / steps, np.asarray(g), atol=2e-5)
+
+
+class TestCheckpointer:
+    def _tree(self, k=0):
+        return {"w": jnp.arange(12.0).reshape(3, 4) + k,
+                "opt": {"m": jnp.ones((5,)) * k}}
+
+    def test_roundtrip(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=False)
+        ck.save(7, self._tree(1), extra={"loss": 2.5})
+        step, tree, extra = ck.restore(template=self._tree())
+        assert step == 7 and extra["loss"] == 2.5
+        np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                      np.asarray(self._tree(1)["w"]))
+
+    def test_async_save_and_wait(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=True)
+        ck.save(1, self._tree(1))
+        ck.save(2, self._tree(2))
+        ck.wait()
+        assert ck.committed_steps() == [1, 2]
+
+    def test_atomic_commit_markers(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=False)
+        ck.save(3, self._tree())
+        # simulate a torn write: directory without marker is invisible
+        os.makedirs(tmp_path / "step_000000009")
+        assert ck.latest_step() == 3
+        with pytest.raises(FileNotFoundError):
+            ck.restore(step=9, template=self._tree())
+
+    def test_keep_gc(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+        for s in range(5):
+            ck.save(s, self._tree(s))
+        assert ck.committed_steps() == [3, 4]
+
+    def test_restore_latest_by_default(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=False)
+        for s in (1, 5, 3):
+            ck.save(s, self._tree(s))
+        step, tree, _ = ck.restore(template=self._tree())
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(tree["opt"]["m"]),
+                                      np.full(5, 5.0))
+
+
+class TestFaultTolerance:
+    def test_preemption_guard_flag(self):
+        g = PreemptionGuard()
+        assert not g.should_stop()
+        g.request_stop()
+        assert g.should_stop()
+
+    def test_preemption_guard_deadline(self):
+        g = PreemptionGuard(deadline_s=0.01)
+        time.sleep(0.02)
+        assert g.should_stop()
+
+    def test_elastic_mesh_proposals(self):
+        em = ElasticMesh(model_axis=16)
+        # full pod
+        assert em.propose(256) == (16, 16, 1)
+        # lost 32 chips -> shrink data axis to 8, double accumulation
+        data, model, accum = em.propose(224)
+        assert (data, model) == (8, 16) and accum == 2
+        with pytest.raises(AssertionError):
+            em.propose(8)  # below TP degree
+
+    def test_straggler_policy_detach_and_scale(self):
+        sp = StragglerPolicy(num_replicas=3, alpha=1.0)
+        sp.observe(1, observed_s=0.5, expected_s=0.1)  # 5x slow
+        assert sp.healthy() == [0, 2]
+        from repro.core import ProfileTable
+        table = ProfileTable.paper_rtx3080()
+        scaled = sp.scale_profile(1, table)
+        np.testing.assert_allclose(scaled.latency, table.latency * 5.0)
+
+    def test_straggler_recovery(self):
+        sp = StragglerPolicy(num_replicas=2, alpha=0.5)
+        sp.observe(0, 1.0, 0.1)   # transient 10x blip
+        for _ in range(10):
+            sp.observe(0, 0.1, 0.1)
+        assert sp.multipliers[0] < 1.2
+        assert 0 in sp.healthy()
+
+
+class TestShardingRules:
+    def _mesh(self):
+        return jax.make_mesh((1, 1), ("data", "model"))
+
+    def test_sanitize_drops_nondivisible(self):
+        mesh = jax.make_mesh((1,), ("model",))
+        # 7 not divisible by any >1 axis; with axis size 1 everything divides
+        spec = sanitize_spec((7,), P("model"), mesh)
+        assert spec == P("model")
+
+    def test_sanitize_no_duplicate_axes(self):
+        mesh = self._mesh()
+        spec = sanitize_spec((4, 4), P("model", "model"), mesh)
+        # second use of "model" dropped
+        assert spec == P("model", None)
+
+    def test_train_rules_fsdp_embed(self):
+        r = train_rules()
+        assert r.axis_for("embed") == ("data",)
+        assert r.axis_for("heads") == "model"
+        assert r.axis_for("layers") is None
+
+    def test_serve_rules_replicate_embed(self):
+        r = serve_rules()
+        assert r.axis_for("embed") is None
+        assert r.seq_axes == "model"
+
+    def test_ep_wide_shards_experts_everywhere(self):
+        r = serve_rules_ep_wide()
+        assert r.axis_for("expert") == ("data", "model")
+
+    def test_spec_for_param(self):
+        mesh = self._mesh()
+        spec = spec_for_param((64, 128), ("embed", "heads"), train_rules(),
+                              mesh)
+        assert spec == P(("data",), "model")

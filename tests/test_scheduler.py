@@ -1,0 +1,203 @@
+"""Unit + property tests for the EdgeServing scheduler and baselines
+(paper Sec. V, Algorithm 1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    EdgeServingScheduler,
+    ProfileTable,
+    QueueSnapshot,
+    SchedulerConfig,
+    VectorizedEdgeServingScheduler,
+    make_scheduler,
+)
+
+
+@pytest.fixture(scope="module")
+def table():
+    return ProfileTable.paper_rtx3080()
+
+
+def snap(waits_per_model, now=0.0):
+    return QueueSnapshot(now, [np.asarray(w, dtype=np.float64) for w in waits_per_model])
+
+
+class TestBatchAndExitSelection:
+    def test_batch_rule_eq5(self, table):
+        s = EdgeServingScheduler(table, SchedulerConfig(max_batch=10))
+        assert s.batch_size(3) == 3
+        assert s.batch_size(10) == 10
+        assert s.batch_size(37) == 10
+
+    def test_exit_deepest_feasible(self, table):
+        # Plenty of slack -> final exit; tight slack -> shallower.
+        cfg = SchedulerConfig(slo=0.050)
+        s = EdgeServingScheduler(table, cfg)
+        e, lat = s.select_exit(m=2, w_max=0.0, batch=1)
+        assert e == table.num_exits - 1  # final feasible at w=0
+
+        # w_max so large that only layer1 fits: L(152, final|3|2, B) too big.
+        w = 0.050 - table(2, 1, 1) + 1e-6  # layer2 infeasible by epsilon
+        e, lat = s.select_exit(m=2, w_max=w, batch=1)
+        assert e == 0
+
+    def test_exit_fallback_when_infeasible(self, table):
+        s = EdgeServingScheduler(table, SchedulerConfig(slo=0.050))
+        e, lat = s.select_exit(m=2, w_max=10.0, batch=10)  # already violated
+        assert e == 0  # shallowest minimises collateral damage
+
+    def test_restricted_exits(self, table):
+        cfg = SchedulerConfig(slo=0.050, allowed_exits=(0, 3))
+        s = EdgeServingScheduler(table, cfg)
+        # slack admits layer3 but not final -> with {layer1, final} must pick layer1
+        w = 0.050 - table(2, 2, 1)  # layer3 exactly feasible, final not
+        assert w > 0
+        e, _ = s.select_exit(m=2, w_max=w, batch=1)
+        assert e == 0
+
+    @given(
+        w_max=st.floats(min_value=0.0, max_value=0.2),
+        batch=st.integers(1, 10),
+        m=st.integers(0, 2),
+        slo=st.sampled_from([0.02, 0.03, 0.05, 0.07]),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_exit_property_constraint(self, table, w_max, batch, m, slo):
+        # Whenever a feasible exit exists, the chosen exit satisfies Eq. 6 and
+        # is the deepest feasible one.
+        s = EdgeServingScheduler(table, SchedulerConfig(slo=slo))
+        e, lat = s.select_exit(m, w_max, batch)
+        feasible = [
+            ei for ei in range(table.num_exits) if w_max + table(m, ei, batch) <= slo
+        ]
+        if feasible:
+            assert e == max(feasible)
+            assert w_max + lat <= slo + 1e-12
+        else:
+            assert e == 0
+
+
+class TestEdgeServingDecision:
+    def test_two_queue_handcheck(self, table):
+        # Queue 0 (R50) has 1 fresh task; queue 2 (R152) has a near-deadline
+        # task. Serving R152 first avoids pushing it over; stability score
+        # must prefer it.
+        cfg = SchedulerConfig(slo=0.050)
+        s = EdgeServingScheduler(table, cfg)
+        d = s.decide(snap([[0.001], [], [0.045]]))
+        assert d.model == 2
+
+    def test_empty_queues_return_none(self, table):
+        s = EdgeServingScheduler(table, SchedulerConfig())
+        assert s.decide(snap([[], [], []])) is None
+
+    def test_decision_batch_never_exceeds_queue(self, table):
+        s = EdgeServingScheduler(table, SchedulerConfig(max_batch=10))
+        d = s.decide(snap([[0.01, 0.005], [], []]))
+        assert d.model == 0 and d.batch_size == 2
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=30, deadline=None)
+    def test_vectorized_matches_reference(self, table, seed):
+        # The vectorised scheduler is numerically identical to the loop
+        # implementation (same decision, same score).
+        rng = np.random.default_rng(seed)
+        waits = [
+            np.sort(rng.uniform(0, 0.08, size=rng.integers(0, 12)))[::-1]
+            for _ in range(3)
+        ]
+        s = snap(waits)
+        cfg = SchedulerConfig(slo=0.050)
+        d_ref = EdgeServingScheduler(table, cfg).decide(s)
+        d_vec = VectorizedEdgeServingScheduler(table, cfg).decide(s)
+        if d_ref is None:
+            assert d_vec is None
+        else:
+            assert (d_ref.model, d_ref.exit_idx, d_ref.batch_size) == (
+                d_vec.model, d_vec.exit_idx, d_vec.batch_size
+            )
+            assert d_vec.stability_score == pytest.approx(
+                d_ref.stability_score, rel=1e-9
+            )
+
+
+class TestBaselinePolicies:
+    def test_all_final_lqf(self, table):
+        s = make_scheduler("all-final", table, SchedulerConfig())
+        d = s.decide(snap([[0.01], [0.02, 0.01, 0.005], [0.04]]))
+        assert d.model == 1  # longest queue
+        assert d.exit_idx == table.num_exits - 1
+
+    def test_all_early_exit_zero(self, table):
+        s = make_scheduler("all-early", table, SchedulerConfig())
+        d = s.decide(snap([[0.01, 0.003], [0.02], []]))
+        assert d.exit_idx == 0
+
+    def test_edf_selects_least_slack(self, table):
+        s = make_scheduler("earlyexit-edf", table, SchedulerConfig(slo=0.05))
+        d = s.decide(snap([[0.010], [0.049], [0.020]]))
+        assert d.model == 1
+
+    def test_allfinal_da_never_early_exits(self, table):
+        s = make_scheduler("allfinal-deadline-aware", table, SchedulerConfig())
+        d = s.decide(snap([[0.049], [0.01], []]))
+        assert d.exit_idx == table.num_exits - 1
+
+    def test_bs1_fixes_batch(self, table):
+        s = make_scheduler("ours-bs1", table, SchedulerConfig(max_batch=10))
+        d = s.decide(snap([[0.02, 0.01, 0.005], [], []]))
+        assert d.batch_size == 1
+
+    def test_symphony_defers_fresh_queue(self, table):
+        s = make_scheduler("symphony", table, SchedulerConfig(slo=0.05))
+        # single fresh task: plenty of slack -> defer (None) with a wake time
+        snap0 = snap([[0.001], [], []])
+        assert s.decide(snap0) is None
+        wake = s.next_wake(snap0)
+        assert wake is not None and wake > 0
+
+    def test_symphony_dispatches_due_queue(self, table):
+        s = make_scheduler("symphony", table, SchedulerConfig(slo=0.05))
+        d = s.decide(snap([[0.045], [], []]))
+        assert d is not None and d.model == 0
+        assert d.exit_idx == table.num_exits - 1  # symphony never early-exits
+
+    def test_symphony_dispatches_full_batch(self, table):
+        s = make_scheduler("symphony", table, SchedulerConfig(slo=0.05, max_batch=4))
+        d = s.decide(snap([[0.002, 0.002, 0.001, 0.001], [], []]))
+        assert d is not None and d.batch_size == 4
+
+    def test_symphony_prunes_expired(self, table):
+        s = make_scheduler("symphony", table, SchedulerConfig(slo=0.05))
+        drops = s.prune(snap([[0.08, 0.06, 0.01], [0.02], []]))
+        assert drops == [(0, 2)]
+
+    def test_unknown_scheduler_raises(self, table):
+        with pytest.raises(ValueError):
+            make_scheduler("nope", table, SchedulerConfig())
+
+    @given(seed=st.integers(0, 2**16), name=st.sampled_from(
+        ["edgeserving", "all-final", "all-early", "earlyexit-lqf",
+         "earlyexit-edf", "allfinal-deadline-aware", "ours-bs1"]))
+    @settings(max_examples=60, deadline=None)
+    def test_property_decisions_well_formed(self, table, seed, name):
+        rng = np.random.default_rng(seed)
+        waits = [
+            np.sort(rng.uniform(0, 0.1, size=rng.integers(0, 15)))[::-1]
+            for _ in range(3)
+        ]
+        s = snap(waits)
+        sched = make_scheduler(name, table, SchedulerConfig(slo=0.05, max_batch=10))
+        d = sched.decide(s)
+        if all(len(w) == 0 for w in waits):
+            assert d is None
+        elif d is not None:
+            assert 0 <= d.model < 3 and len(waits[d.model]) > 0
+            assert 1 <= d.batch_size <= min(len(waits[d.model]), 10)
+            assert 0 <= d.exit_idx < table.num_exits
+            assert d.predicted_latency == pytest.approx(
+                table(d.model, d.exit_idx, d.batch_size)
+            )

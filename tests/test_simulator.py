@@ -1,0 +1,164 @@
+"""Integration + property tests for the serving simulator (paper Sec. VI)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ProfileTable,
+    Request,
+    SchedulerConfig,
+    ServingSimulator,
+    make_scheduler,
+    paper_rate_vector,
+    poisson_arrivals,
+    run_experiment,
+)
+
+
+@pytest.fixture(scope="module")
+def table():
+    return ProfileTable.paper_rtx3080()
+
+
+class TestTraffic:
+    def test_deterministic(self):
+        a = poisson_arrivals([100.0, 50.0], 5.0, seed=7)
+        b = poisson_arrivals([100.0, 50.0], 5.0, seed=7)
+        assert [(r.model, r.arrival) for r in a] == [(r.model, r.arrival) for r in b]
+
+    def test_sorted_and_bounded(self):
+        arr = poisson_arrivals([200.0, 100.0, 50.0], 10.0, seed=3)
+        times = [r.arrival for r in arr]
+        assert times == sorted(times)
+        assert all(0 <= t < 10.0 for t in times)
+
+    def test_rate_accuracy(self):
+        arr = poisson_arrivals([300.0], 30.0, seed=1)
+        # Poisson(9000): 4 sigma ~ 380
+        assert abs(len(arr) - 9000) < 400
+
+    def test_paper_rate_vector(self):
+        assert paper_rate_vector(100) == [300.0, 200.0, 100.0]
+
+
+class TestConservation:
+    @given(
+        seed=st.integers(0, 2**16),
+        lam=st.sampled_from([40, 120, 200]),
+        name=st.sampled_from(["edgeserving", "all-final", "earlyexit-edf"]),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_property_all_arrivals_accounted(self, table, seed, lam, name):
+        # completions + drops + residual == arrivals (no request lost/dup).
+        sched = make_scheduler(name, table, SchedulerConfig(slo=0.05))
+        arrivals = poisson_arrivals(paper_rate_vector(lam), 3.0, seed=seed)
+        sim = ServingSimulator(sched, table, num_models=3, seed=seed)
+        res = sim.run(arrivals, 3.0, warmup_tasks=0)
+        total = (
+            res.metrics.num_completed
+            + res.metrics.dropped
+            + res.metrics.residual_queue
+        )
+        assert total == len(arrivals)
+        ids = [c.req_id for c in res.completions]
+        assert len(ids) == len(set(ids))  # no duplicates
+
+    def test_fifo_within_queue(self, table):
+        # Within one model queue, dispatch order preserves arrival order.
+        sched = make_scheduler("edgeserving", table, SchedulerConfig(slo=0.05))
+        arrivals = poisson_arrivals([400.0, 0.0, 0.0], 2.0, seed=5)
+        sim = ServingSimulator(sched, table, num_models=3)
+        res = sim.run(arrivals, 2.0, warmup_tasks=0)
+        d = [c.req_id for c in res.completions if c.model == 0]
+        assert d == sorted(d)
+
+    def test_time_division_no_overlap(self, table):
+        # Quanta never overlap: the accelerator is exclusive (paper Sec. III).
+        sched = make_scheduler("edgeserving", table, SchedulerConfig(slo=0.05))
+        arrivals = poisson_arrivals(paper_rate_vector(150), 3.0, seed=2)
+        sim = ServingSimulator(sched, table, num_models=3)
+        res = sim.run(arrivals, 3.0, warmup_tasks=0, keep_traces=True)
+        for a, b in zip(res.traces, res.traces[1:]):
+            assert b.t_start >= a.t_end - 1e-12
+
+    def test_latency_decomposition(self, table):
+        # Eq. 1: T = w + t, with t == the profiled latency (no noise).
+        sched = make_scheduler("edgeserving", table, SchedulerConfig(slo=0.05))
+        arrivals = poisson_arrivals(paper_rate_vector(80), 2.0, seed=9)
+        sim = ServingSimulator(sched, table, num_models=3)
+        res = sim.run(arrivals, 2.0, warmup_tasks=0)
+        for c in res.completions[:200]:
+            assert c.total_latency == pytest.approx(c.queueing + c.service)
+            assert c.service == pytest.approx(
+                table(c.model, c.exit_idx, c.batch_size)
+            )
+            assert c.dispatch >= c.arrival - 1e-12
+
+
+class TestEndToEndBehaviour:
+    def test_edgeserving_beats_allfinal_under_load(self, table):
+        cfg = SchedulerConfig(slo=0.05)
+        ours = run_experiment(
+            make_scheduler("edgeserving", table, cfg), table,
+            paper_rate_vector(180), horizon=8.0, seed=4)
+        allf = run_experiment(
+            make_scheduler("all-final", table, cfg), table,
+            paper_rate_vector(180), horizon=8.0, seed=4)
+        assert ours.metrics.violation_ratio < 0.01
+        assert allf.metrics.violation_ratio > 0.30
+        assert ours.metrics.p95_latency < allf.metrics.p95_latency
+
+    def test_exit_depth_shallows_under_load(self, table):
+        # Paper Fig. 5: deeper exits at low traffic, shallower under load.
+        cfg = SchedulerConfig(slo=0.05)
+        lo = run_experiment(make_scheduler("edgeserving", table, cfg), table,
+                            paper_rate_vector(20), horizon=8.0, seed=4)
+        hi = run_experiment(make_scheduler("edgeserving", table, cfg), table,
+                            paper_rate_vector(240), horizon=8.0, seed=4)
+        assert lo.metrics.mean_exit_depth > hi.metrics.mean_exit_depth
+        assert lo.metrics.mean_accuracy > hi.metrics.mean_accuracy
+
+    def test_all_early_low_latency_low_accuracy(self, table):
+        cfg = SchedulerConfig(slo=0.05)
+        res = run_experiment(make_scheduler("all-early", table, cfg), table,
+                             paper_rate_vector(100), horizon=5.0, seed=4)
+        assert res.metrics.p95_latency < 0.01   # paper: ~2-3 ms
+        assert res.metrics.mean_accuracy < 0.10  # paper: ~7.4%
+
+    def test_service_noise_reproducible(self, table):
+        cfg = SchedulerConfig(slo=0.05)
+        r = [
+            run_experiment(make_scheduler("edgeserving", table, cfg), table,
+                           paper_rate_vector(100), horizon=3.0, seed=11,
+                           service_noise_cov=0.03).metrics.p95_latency
+            for _ in range(2)
+        ]
+        assert r[0] == r[1]
+
+    def test_symphony_sheds_under_overload(self, table):
+        cfg = SchedulerConfig(slo=0.05)
+        res = run_experiment(make_scheduler("symphony", table, cfg), table,
+                             paper_rate_vector(240), horizon=5.0, seed=4)
+        assert res.metrics.dropped > 0
+        # shedding keeps completed-task P95 bounded near the SLO
+        assert res.metrics.p95_latency < 0.08
+
+    def test_model_map_deployment_mix(self, table):
+        # 3x resnet50 homogeneous mix (paper Fig. 9) via model_map.
+        cfg = SchedulerConfig(slo=0.05)
+        res = run_experiment(
+            make_scheduler("edgeserving", table, cfg), table,
+            [100.0, 100.0, 100.0], horizon=4.0, seed=4,
+            model_map=[0, 0, 0])
+        assert res.metrics.violation_ratio < 0.01
+
+    def test_warmup_exclusion(self, table):
+        cfg = SchedulerConfig(slo=0.05)
+        sched = make_scheduler("edgeserving", table, cfg)
+        arrivals = poisson_arrivals(paper_rate_vector(60), 3.0, seed=8)
+        sim = ServingSimulator(sched, table, num_models=3)
+        all_tasks = sim.run(arrivals, 3.0, warmup_tasks=0).metrics.num_completed
+        post = sim.run(arrivals, 3.0, warmup_tasks=100).metrics.num_completed
+        assert post == all_tasks - 100

@@ -1,0 +1,151 @@
+"""Unit + property tests for the urgency activation and stability score
+(paper Eq. 3-4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    DEFAULT_CLIP,
+    QueueSnapshot,
+    candidate_stability_scores,
+    stability_score,
+    stability_score_np,
+    urgency,
+    urgency_np,
+)
+
+
+class TestUrgency:
+    def test_value_at_deadline_is_one(self):
+        # Eq. 3: f(tau) = exp(0) = 1 for any tau.
+        for tau in (0.02, 0.05, 0.1, 1.0):
+            assert urgency_np(np.array([tau]), tau)[0] == pytest.approx(1.0)
+
+    def test_clip_threshold(self):
+        # Paper: w > tau(1 + ln 10) ~ 3.3 tau saturates at C = 10.
+        tau = 0.05
+        w = np.array([tau * (1 + np.log(10.0)) + 1e-9, 100.0])
+        out = urgency_np(w, tau)
+        assert np.all(out == DEFAULT_CLIP)
+
+    def test_zero_wait(self):
+        assert urgency_np(np.array([0.0]), 0.05)[0] == pytest.approx(np.exp(-1.0))
+
+    @given(
+        w=st.floats(min_value=0.0, max_value=10.0),
+        tau=st.floats(min_value=1e-3, max_value=1.0),
+        clip=st.floats(min_value=1.0, max_value=100.0),
+    )
+    def test_bounds_property(self, w, tau, clip):
+        v = float(urgency_np(np.array([w]), tau, clip)[0])
+        assert 0.0 < v <= clip
+
+    @given(
+        w1=st.floats(min_value=0.0, max_value=5.0),
+        dw=st.floats(min_value=0.0, max_value=5.0),
+        tau=st.floats(min_value=1e-3, max_value=1.0),
+    )
+    def test_monotone_property(self, w1, dw, tau):
+        a = float(urgency_np(np.array([w1]), tau)[0])
+        b = float(urgency_np(np.array([w1 + dw]), tau)[0])
+        assert b >= a  # urgency never decreases with waiting time
+
+    def test_jnp_matches_np(self):
+        rng = np.random.default_rng(0)
+        w = rng.uniform(0, 0.3, size=64)
+        np.testing.assert_allclose(
+            np.asarray(urgency(jnp.asarray(w), 0.05)),
+            urgency_np(w, 0.05),
+            rtol=1e-6,
+        )
+
+
+class TestStabilityScore:
+    def test_additive_over_queues(self):
+        tau = 0.05
+        waits = [np.array([0.01, 0.02]), np.array([0.03]), np.array([])]
+        expect = sum(float(urgency_np(w, tau).sum()) for w in waits if len(w))
+        assert stability_score_np(waits, tau) == pytest.approx(expect)
+
+    def test_padded_jnp_matches_list_np(self):
+        rng = np.random.default_rng(1)
+        waits = [rng.uniform(0, 0.2, size=n) for n in (5, 0, 3, 17)]
+        snap = QueueSnapshot(0.0, waits)
+        w, mask = snap.padded()
+        got = float(stability_score(jnp.asarray(w), jnp.asarray(mask), 0.05))
+        want = stability_score_np(waits, 0.05)
+        assert got == pytest.approx(want, rel=1e-6)
+
+    @given(
+        seed=st.integers(0, 2**16),
+        m_count=st.integers(1, 5),
+        tau=st.floats(min_value=5e-3, max_value=0.5),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_monotone_in_any_wait(self, seed, m_count, tau):
+        # S is strictly non-decreasing if any task waits longer.
+        rng = np.random.default_rng(seed)
+        waits = [np.sort(rng.uniform(0, 2 * tau, size=rng.integers(1, 8)))[::-1]
+                 for _ in range(m_count)]
+        s0 = stability_score_np(waits, tau)
+        waits2 = [w.copy() for w in waits]
+        waits2[0] = waits2[0] + 0.01 * tau
+        assert stability_score_np(waits2, tau) >= s0
+
+
+class TestCandidateScores:
+    def test_matches_manual_prediction(self):
+        # Hand-check Sec. V-C: candidate m serves its B oldest tasks; all
+        # other tasks (own tail + other queues) wait L_m longer.
+        tau, clip = 0.05, 10.0
+        waits = [np.array([0.030, 0.020, 0.010]), np.array([0.040])]
+        snap = QueueSnapshot(0.0, waits)
+        w, mask = snap.padded()
+        lats = np.array([0.008, 0.004])
+        batches = np.array([2, 1])
+        got = np.asarray(
+            candidate_stability_scores(
+                jnp.asarray(w, jnp.float32),
+                jnp.asarray(mask, jnp.float32),
+                jnp.asarray(lats, jnp.float32),
+                jnp.asarray(batches),
+                tau,
+                clip,
+            )
+        )
+
+        def f(x):
+            return min(np.exp(x / tau - 1.0), clip)
+
+        # candidate 0: serves its 2 oldest; tail task 0.010 and queue-1 task
+        # 0.040 each wait 0.008 longer.
+        want0 = f(0.010 + 0.008) + f(0.040 + 0.008)
+        # candidate 1: serves its single task; queue-0 tasks wait 0.004 longer.
+        want1 = f(0.030 + 0.004) + f(0.020 + 0.004) + f(0.010 + 0.004)
+        np.testing.assert_allclose(got, [want0, want1], rtol=1e-5)
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=25, deadline=None)
+    def test_property_served_tasks_excluded(self, seed):
+        # Serving more tasks from a queue can only lower that candidate's
+        # score (served tasks are removed from the prediction).
+        rng = np.random.default_rng(seed)
+        m_count = rng.integers(2, 5)
+        waits = [np.sort(rng.uniform(0, 0.1, size=rng.integers(1, 9)))[::-1]
+                 for _ in range(m_count)]
+        snap = QueueSnapshot(0.0, waits)
+        w, mask = snap.padded()
+        lats = rng.uniform(1e-3, 2e-2, size=m_count)
+        b_small = np.array([1] * m_count)
+        b_big = np.array([min(len(q), 3) for q in waits])
+        args = lambda b: (
+            jnp.asarray(w, jnp.float32), jnp.asarray(mask, jnp.float32),
+            jnp.asarray(lats, jnp.float32), jnp.asarray(b), 0.05, 10.0,
+        )
+        s_small = np.asarray(candidate_stability_scores(*args(b_small)))
+        s_big = np.asarray(candidate_stability_scores(*args(b_big)))
+        assert np.all(s_big <= s_small + 1e-5)
