@@ -1,0 +1,44 @@
+"""Beyond-paper Fig. 12: joint (model, exit, batch) lattice vs Eq. 5 greedy.
+
+Sweeps traffic intensity on a batch-saturating profile (accelerator
+throughput flat past the knee — the BCEdge regime where batch size is a
+real degree of freedom) and compares the paper-exact greedy scheduler
+against the candidate-lattice scheduler at two SLOs. On the calibrated
+sub-saturation RTX 3080 curve the two policies coincide (an extra batch
+item costs ~L1/6, so the stability argmin always takes the full Eq. 5
+batch); past the knee the lattice trades batch size against collateral
+queue urgency and lowers the violation ratio at high load.
+
+Each (slo, policy) sweep ends with a ``summary`` row carrying the mean
+violation ratio across the sweep — the headline lattice-vs-greedy number.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import ProfileTable
+from benchmarks.common import LAMBDAS, Row, serving_row
+
+SLOS = (0.030, 0.050)
+KNEE = 4
+
+
+def run() -> List[Row]:
+    table = ProfileTable.paper_rtx3080().with_batch_saturation(KNEE)
+    rows: List[Row] = []
+    for slo in SLOS:
+        slo_ms = int(slo * 1e3)
+        for sched in ("edgeserving", "edgeserving-lattice"):
+            viols = []
+            for lam in LAMBDAS:
+                row, m = serving_row(
+                    f"fig12/{sched}/slo{slo_ms}ms/lam{lam}", sched, table,
+                    lam, slo=slo)
+                rows.append(row)
+                viols.append(m.violation_ratio)
+            mean_viol = sum(viols) / len(viols)
+            rows.append(Row(
+                f"fig12/{sched}/slo{slo_ms}ms/summary", 0.0,
+                f"mean_viol={mean_viol*100:.3f}%"))
+    return rows

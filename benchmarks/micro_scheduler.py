@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.core import (
     EdgeServingScheduler,
+    LatticeEdgeServingScheduler,
     ProfileTable,
     QueueSnapshot,
     SchedulerConfig,
@@ -41,17 +42,24 @@ def run() -> List[Row]:
     rows = []
     table = ProfileTable.paper_rtx3080()
     cfg = SchedulerConfig(slo=0.05)
+    lat_cfg = SchedulerConfig(slo=0.05, lattice=True)
     for m_count, qlen in [(3, 16), (3, 256), (3, 2048)]:
         snap = _snapshot(m_count, qlen)
         loop = EdgeServingScheduler(table, cfg)
         vec = VectorizedEdgeServingScheduler(table, cfg)
+        lattice = LatticeEdgeServingScheduler(table, lat_cfg)
         us_loop = _time(lambda: loop.decide(snap))
         us_vec = _time(lambda: vec.decide(snap))
+        us_lat = _time(lambda: lattice.decide(snap))
+        n_cands = len(lattice.enumerate_candidates(snap)[0])
         rows.append(Row(f"micro/scheduler-loop/M{m_count}xQ{qlen}", us_loop,
                         f"decisions_per_s={1e6/us_loop:.0f}"))
         rows.append(Row(f"micro/scheduler-vec/M{m_count}xQ{qlen}", us_vec,
                         f"decisions_per_s={1e6/us_vec:.0f};"
                         f"speedup={us_loop/us_vec:.2f}x"))
+        rows.append(Row(f"micro/scheduler-lattice/M{m_count}xQ{qlen}", us_lat,
+                        f"decisions_per_s={1e6/us_lat:.0f};"
+                        f"n_candidates={n_cands}"))
 
     # fused Pallas scoring (interpret mode: correctness-path timing only)
     m_count, qlen = 8, 512
@@ -65,5 +73,18 @@ def run() -> List[Row]:
         w, mask, lat, bat, tau=0.05, interpret=True).block_until_ready()
     us = _time(fn, n=10)
     rows.append(Row(f"micro/stability-kernel-interp/M{m_count}xQ{qlen}", us,
+                    "pallas_interpret_cpu"))
+
+    # flattened lattice layout: 5 ladder rungs per queue through the same
+    # fused kernel via the candidate->queue index map
+    n_cands = 5 * m_count
+    cq = jnp.repeat(jnp.arange(m_count, dtype=jnp.int32), 5)
+    lat_l = jnp.tile(jnp.asarray([1, 2, 3, 4, 5], jnp.float32) * 1e-3, m_count)
+    bat_l = jnp.tile(jnp.asarray([1, 2, 4, 8, 10], jnp.int32), m_count)
+    fn = lambda: stability_scores(
+        w, mask, lat_l, bat_l, cq, tau=0.05, interpret=True
+    ).block_until_ready()
+    us = _time(fn, n=10)
+    rows.append(Row(f"micro/stability-kernel-lattice/N{n_cands}xQ{qlen}", us,
                     "pallas_interpret_cpu"))
     return rows

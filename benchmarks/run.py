@@ -21,6 +21,7 @@ from benchmarks import (
     fig9_model_combo,
     fig10_cross_platform,
     fig11_ablation,
+    fig12_lattice,
     micro_kernels,
     micro_scheduler,
     table1_accuracy,
@@ -37,6 +38,7 @@ MODULES = {
     "fig9": fig9_model_combo,
     "fig10": fig10_cross_platform,
     "fig11": fig11_ablation,
+    "fig12": fig12_lattice,
     "micro_scheduler": micro_scheduler,
     "micro_kernels": micro_kernels,
 }

@@ -24,6 +24,7 @@ from repro.core.queues import QueueSnapshot, ServiceQueue
 from repro.core.request import Completion, Decision, Request, ServingTrace
 from repro.core.scheduler import (
     EdgeServingScheduler,
+    LatticeEdgeServingScheduler,
     Scheduler,
     SchedulerConfig,
     VectorizedEdgeServingScheduler,
@@ -33,6 +34,7 @@ from repro.core.traffic import paper_rate_vector, poisson_arrivals
 from repro.core.urgency import (
     DEFAULT_CLIP,
     candidate_stability_scores,
+    lattice_stability_scores,
     stability_score,
     stability_score_np,
     urgency,
@@ -50,6 +52,7 @@ __all__ = [
     "EarlyExitEDFScheduler",
     "EarlyExitLQFScheduler",
     "EdgeServingScheduler",
+    "LatticeEdgeServingScheduler",
     "NoBatchingScheduler",
     "ProfileTable",
     "QueueSnapshot",
@@ -64,6 +67,7 @@ __all__ = [
     "SymphonyScheduler",
     "VectorizedEdgeServingScheduler",
     "candidate_stability_scores",
+    "lattice_stability_scores",
     "make_scheduler",
     "paper_rate_vector",
     "poisson_arrivals",

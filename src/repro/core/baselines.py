@@ -27,6 +27,7 @@ from repro.core.queues import QueueSnapshot
 from repro.core.request import Decision
 from repro.core.scheduler import (
     EdgeServingScheduler,
+    LatticeEdgeServingScheduler,
     Scheduler,
     SchedulerConfig,
 )
@@ -193,6 +194,7 @@ class NoBatchingScheduler(EdgeServingScheduler):
 
 SCHEDULERS = {
     "edgeserving": EdgeServingScheduler,
+    "edgeserving-lattice": LatticeEdgeServingScheduler,
     "all-final": AllFinalScheduler,
     "all-early": AllEarlyScheduler,
     "symphony": SymphonyScheduler,
@@ -205,8 +207,13 @@ SCHEDULERS = {
 
 def make_scheduler(name: str, table: ProfileTable, config: SchedulerConfig) -> Scheduler:
     try:
-        return SCHEDULERS[name](table, config)
+        cls = SCHEDULERS[name]
     except KeyError:
         raise ValueError(
             f"unknown scheduler {name!r}; available: {sorted(SCHEDULERS)}"
         ) from None
+    # config.lattice upgrades the flagship policy to the joint
+    # (model, exit, batch) lattice; baselines/ablations are unaffected.
+    if config.lattice and cls is EdgeServingScheduler:
+        cls = LatticeEdgeServingScheduler
+    return cls(table, config)

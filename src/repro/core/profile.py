@@ -106,6 +106,32 @@ class ProfileTable:
         """Apply a P95-style safety multiplier (TPU-analytic tables)."""
         return dataclasses.replace(self, latency=self.latency * multiplier)
 
+    def with_batch_saturation(self, knee: int, slope: float = 0.85) -> "ProfileTable":
+        """Model accelerator batch saturation past ``knee`` (BCEdge regime).
+
+        Up to batch ``knee`` the original curve applies (batching is cheap);
+        beyond it each extra item costs ``slope`` * the batch-1 latency —
+        the compute-saturated regime where throughput no longer improves
+        with batch size. This is the regime in which batch size becomes a
+        real scheduling degree of freedom (see the lattice scheduler and
+        ``benchmarks/fig12_lattice.py``).
+        """
+        assert 1 <= knee <= self.max_batch and slope > 0
+        bsz = np.asarray(self.batch_sizes, dtype=np.float64)
+        # index by batch-size *value*, not position: the grid need not be
+        # contiguous (measure()/from_roofline accept arbitrary ladders)
+        k_idx = int(np.searchsorted(self.batch_sizes, knee, side="right")) - 1
+        assert k_idx >= 0, "knee below the smallest profiled batch"
+        per_item = self.latency[:, :, 0:1] / float(self.batch_sizes[0])
+        extra = np.maximum(bsz[None, None, :] - knee, 0.0) * slope
+        saturated = self.latency[:, :, k_idx:k_idx + 1] + per_item * extra
+        lat = np.where(bsz[None, None, :] <= knee, self.latency, saturated)
+        lat = np.maximum.accumulate(lat, axis=2)
+        return dataclasses.replace(
+            self, latency=lat,
+            meta={**self.meta, "batch_knee": knee, "batch_slope": slope},
+        )
+
     def restrict_exits(self, exit_indices: Sequence[int]) -> "ProfileTable":
         """Keep only a subset of exits (paper Fig. 7 exit-configuration study)."""
         idx = list(exit_indices)

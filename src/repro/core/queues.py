@@ -58,11 +58,12 @@ class QueueSnapshot:
               i.e. the maximum queueing time ``w_max`` of that queue).
     """
 
-    __slots__ = ("now", "waits")
+    __slots__ = ("now", "waits", "_padded_cache")
 
     def __init__(self, now: float, waits: Sequence[np.ndarray]):
         self.now = now
         self.waits = list(waits)
+        self._padded_cache = None  # lazily built default padded() view
 
     @property
     def num_models(self) -> int:
@@ -86,7 +87,21 @@ class QueueSnapshot:
     def padded(
         self, max_q: Optional[int] = None, dtype=np.float64
     ) -> "tuple[np.ndarray, np.ndarray]":
-        """Padded ``([M, maxQ] waits, [M, maxQ] mask)`` for vectorised scoring."""
+        """Padded ``([M, maxQ] waits, [M, maxQ] mask)`` for vectorised scoring.
+
+        The default view (``max_q=None``, float64) is built once and reused:
+        the snapshot is immutable, and the lattice scheduler, the vectorised
+        greedy, and A/B comparisons all score off the same matrices.
+        """
+        if max_q is None and dtype is np.float64:
+            if self._padded_cache is None:
+                self._padded_cache = self._build_padded(None, np.float64)
+            return self._padded_cache
+        return self._build_padded(max_q, dtype)
+
+    def _build_padded(
+        self, max_q: Optional[int], dtype
+    ) -> "tuple[np.ndarray, np.ndarray]":
         m_count = len(self.waits)
         cap = max_q or max((len(w) for w in self.waits), default=0)
         cap = max(cap, 1)

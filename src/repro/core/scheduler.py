@@ -30,12 +30,23 @@ class SchedulerConfig:
       clip:       urgency clip C (paper example: 10).
       allowed_exits: optional subset of exit indices the scheduler may use
                   (paper Fig. 7 exit-configuration study); None = all.
+      lattice:    False (default) = the paper-exact Eq. 5 batch rule
+                  ``B* = min(|Q_m|, B_max)``; True = batch size becomes a
+                  scheduling degree of freedom: each queue contributes one
+                  candidate per ladder rung and the stability score picks
+                  the global argmin over the joint (model, exit, batch)
+                  lattice (beyond-paper extension; see docs/scheduler.md).
+      batch_ladder: explicit lattice rungs; rungs above the Eq. 5 cap are
+                  dropped and the cap itself is always included. None =
+                  geometric ladder {1, 2, 4, ...} up to the cap.
     """
 
     slo: float = 0.050
     max_batch: int = 10
     clip: float = DEFAULT_CLIP
     allowed_exits: Optional[Tuple[int, ...]] = None
+    lattice: bool = False
+    batch_ladder: Optional[Tuple[int, ...]] = None
 
 
 class Scheduler:
@@ -57,6 +68,29 @@ class Scheduler:
     def batch_size(self, qlen: int) -> int:
         """Eq. 5: B* = min(|Q_m|, B_max)."""
         return min(qlen, self.config.max_batch)
+
+    def batch_candidates(self, qlen: int) -> Tuple[int, ...]:
+        """Candidate batch sizes for a queue of length ``qlen``.
+
+        Greedy (``config.lattice=False``): the single Eq. 5 batch. Lattice:
+        the configured ladder clipped to the Eq. 5 cap, cap always included,
+        ordered descending so equal-score ties resolve toward serving more.
+        """
+        cap = self.batch_size(qlen)
+        if cap <= 0:
+            return ()
+        if not self.config.lattice:
+            return (cap,)
+        if self.config.batch_ladder is not None:
+            rungs = {int(b) for b in self.config.batch_ladder if 1 <= b <= cap}
+        else:
+            rungs = set()
+            b = 1
+            while b < cap:
+                rungs.add(b)
+                b *= 2
+        rungs.add(cap)
+        return tuple(sorted(rungs, reverse=True))
 
     def select_exit(self, m: int, w_max: float, batch: int) -> Tuple[int, float]:
         """Eq. 6: deepest allowed exit with ``w_max + L(m,e,B) <= tau``.
@@ -186,4 +220,108 @@ class VectorizedEdgeServingScheduler(Scheduler):
             batch_size=int(batches[m_star]),
             predicted_latency=float(lats[m_star]),
             stability_score=float(scores[m_star]),
+        )
+
+
+class LatticeEdgeServingScheduler(Scheduler):
+    """Joint (model, exit, batch) candidate-lattice scheduling.
+
+    Beyond-paper extension of Algorithm 1: instead of fixing
+    ``B* = min(|Q_m|, B_max)`` (Eq. 5) and searching only over models, every
+    non-empty queue contributes one candidate per batch-ladder rung (see
+    ``Scheduler.batch_candidates``), each with its own Eq. 6 deepest-feasible
+    exit at that batch's latency. All candidates are scored with the same
+    Sec. V-C queue-status prediction in one padded vectorised pass (the
+    NumPy twin of the ``repro.kernels.stability_score`` lattice kernel), and
+    the global argmin wins.
+
+    Why this helps under tight deadlines: a smaller-than-Eq.-5 batch has a
+    lower service latency L, which (a) shifts every other queue's tasks less
+    — less collateral urgency — and (b) can make a deeper exit feasible for
+    the served tasks. The stability score already prices exactly this
+    trade-off; the lattice merely exposes the action space to it (cf. BCEdge
+    / D-STACK adaptive batching). With the lattice restricted to the single
+    Eq. 5 rung this scheduler is decision-identical to
+    ``VectorizedEdgeServingScheduler`` (tested).
+
+    Candidate order is (queue ascending, batch descending), and score ties
+    resolve by (larger w_max, then candidate order) — so ties prefer the
+    more urgent queue, then serving more tasks, exactly generalising the
+    greedy tiebreak.
+    """
+
+    name = "edgeserving-lattice"
+
+    def __init__(self, table: ProfileTable, config: SchedulerConfig):
+        # The class *is* the lattice policy: force the switch on so that
+        # make_scheduler("edgeserving-lattice") with a default config does
+        # not silently degenerate to the greedy single-rung ladder.
+        if not config.lattice:
+            config = dataclasses.replace(config, lattice=True)
+        super().__init__(table, config)
+
+    def enumerate_candidates(
+        self, snapshot: QueueSnapshot
+    ) -> "tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]":
+        """Flatten the feasible (m, e, B) lattice for this snapshot.
+
+        Returns ``(cand_queue, cand_batch, cand_exit, cand_latency,
+        cand_wmax)`` arrays of equal length N, in (queue asc, batch desc)
+        order. Exits follow the Eq. 6 deepest-feasible/fallback rule at each
+        rung's latency.
+        """
+        queues: List[int] = []
+        batches: List[int] = []
+        exits: List[int] = []
+        lats: List[float] = []
+        wmaxes: List[float] = []
+        for m in snapshot.nonempty():
+            w_max = snapshot.w_max(m)
+            for b in self.batch_candidates(snapshot.qlen(m)):
+                e, lat = self.select_exit(m, w_max, b)
+                queues.append(m)
+                batches.append(b)
+                exits.append(e)
+                lats.append(lat)
+                wmaxes.append(w_max)
+        return (
+            np.asarray(queues, dtype=np.int64),
+            np.asarray(batches, dtype=np.int64),
+            np.asarray(exits, dtype=np.int64),
+            np.asarray(lats, dtype=np.float64),
+            np.asarray(wmaxes, dtype=np.float64),
+        )
+
+    def decide(self, snapshot: QueueSnapshot) -> Optional[Decision]:
+        cand_queue, batches, exits, lats, w_maxes = self.enumerate_candidates(
+            snapshot)
+        n = len(cand_queue)
+        if n == 0:
+            return None
+        tau, clip = self.config.slo, self.config.clip
+        w, mask = snapshot.padded()
+        max_q = w.shape[1]
+
+        # One [N, M, maxQ] scoring pass — op-for-op identical to
+        # VectorizedEdgeServingScheduler so the restricted lattice is
+        # bitwise-equivalent (and to the Pallas lattice kernel semantics).
+        shifted = w[None, :, :] + lats[:, None, None]
+        urg = np.minimum(
+            np.exp(np.minimum(shifted / tau - 1.0, np.log(clip))), clip
+        ) * mask[None, :, :]
+        total = urg.sum(axis=(1, 2))
+        pos = np.arange(max_q)[None, :]
+        served = (pos < batches[:, None]).astype(np.float32)
+        own = urg[np.arange(n), cand_queue, :]
+        scores = total - (own * served).sum(axis=1)
+
+        # argmin; ties -> larger w_max, then candidate order (batch desc).
+        order = np.lexsort((-w_maxes, scores))
+        i = int(order[0])
+        return Decision(
+            model=int(cand_queue[i]),
+            exit_idx=int(exits[i]),
+            batch_size=int(batches[i]),
+            predicted_latency=float(lats[i]),
+            stability_score=float(scores[i]),
         )

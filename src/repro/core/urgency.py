@@ -82,6 +82,55 @@ def stability_score(
     return jnp.sum(urgency(w, tau, clip) * mask)
 
 
+def lattice_stability_scores(
+    w: jax.Array,
+    mask: jax.Array,
+    cand_latency: jax.Array,
+    cand_batch: jax.Array,
+    cand_queue: jax.Array,
+    tau: float,
+    clip: float = DEFAULT_CLIP,
+) -> jax.Array:
+    """Score a flattened (model, exit, batch) candidate lattice (Eq. 4-7).
+
+    Generalises :func:`candidate_stability_scores` from one candidate per
+    queue to an arbitrary list of ``N`` candidates, each tagged with the
+    queue it would serve: candidate ``n`` hypothetically serves the
+    ``B_n = cand_batch[n]`` oldest tasks of queue ``cand_queue[n]`` for
+    ``L_n = cand_latency[n]`` seconds. Prediction (paper Sec. V-C "Queue
+    Status Prediction"):
+      * served tasks are removed;
+      * every other task (same queue beyond ``B_n``, and all other queues)
+        has its queueing time extended by ``L_n``.
+
+    Args:
+      w:            ``[M, maxQ]`` FIFO-sorted (oldest first) wait matrix.
+      mask:         ``[M, maxQ]`` validity mask.
+      cand_latency: ``[N]`` per-candidate profiled latency ``L_n``.
+      cand_batch:   ``[N]`` per-candidate batch size ``B_n`` (int).
+      cand_queue:   ``[N]`` queue index each candidate serves (int in [0, M)).
+    Returns:
+      ``[N]`` stability score ``S_n`` for each candidate.
+    """
+    max_q = w.shape[1]
+    n = cand_latency.shape[0]
+    pos = jnp.arange(max_q)[None, :]                      # [1, maxQ]
+    served = pos < cand_batch[:, None]                    # [N, maxQ]
+
+    # f(w + L_n) for all tasks, per candidate: [N, M, maxQ]
+    shifted = w[None, :, :] + cand_latency[:, None, None]
+    urg = jnp.minimum(
+        jnp.exp(jnp.minimum(shifted / tau - 1.0, jnp.log(clip))), clip
+    ) * mask[None, :, :]
+
+    total = jnp.sum(urg, axis=(1, 2))                     # [N] sum over everything
+    # subtract the served (removed) tasks of the candidate's target queue
+    # (own is already masked via urg, matching the Pallas kernel op-for-op)
+    own = urg[jnp.arange(n), cand_queue, :]               # [N, maxQ]
+    removed = jnp.sum(own * served, axis=1)
+    return total - removed
+
+
 def candidate_stability_scores(
     w: jax.Array,
     mask: jax.Array,
@@ -92,12 +141,8 @@ def candidate_stability_scores(
 ) -> jax.Array:
     """Score every candidate model choice in one shot (vectorised Eq. 4-7).
 
-    Under candidate ``m`` the scheduler hypothetically serves the ``B_m``
-    oldest tasks of queue ``m`` for ``L_m = L(m, e*_m, B*_m)`` seconds.
-    Prediction (paper Sec. V-C "Queue Status Prediction"):
-      * served tasks are removed;
-      * every other task (same queue beyond ``B_m``, and all other queues)
-        has its queueing time extended by ``L_m``.
+    The Eq. 5/Eq. 6 special case of :func:`lattice_stability_scores`:
+    exactly one candidate per queue, candidate ``m`` serving queue ``m``.
 
     Args:
       w:            ``[M, maxQ]`` FIFO-sorted (oldest first) wait matrix.
@@ -108,18 +153,7 @@ def candidate_stability_scores(
       ``[M]`` stability score ``S_m`` for each candidate. Candidates with
       empty queues still get a (meaningless) score; callers mask them.
     """
-    m_count, max_q = w.shape
-    pos = jnp.arange(max_q)[None, :]                      # [1, maxQ]
-    served = pos < cand_batch[:, None]                    # [M, maxQ] rows=candidate
-
-    # f(w + L_m) for all tasks, per candidate: [M(cand), M(queue), maxQ]
-    shifted = w[None, :, :] + cand_latency[:, None, None]
-    urg = jnp.minimum(
-        jnp.exp(jnp.minimum(shifted / tau - 1.0, jnp.log(clip))), clip
-    ) * mask[None, :, :]
-
-    total = jnp.sum(urg, axis=(1, 2))                     # [M] sum over everything
-    # subtract the served (removed) tasks of the candidate's own queue
-    own = urg[jnp.arange(m_count), jnp.arange(m_count), :]  # [M, maxQ]
-    removed = jnp.sum(own * served * mask, axis=1)        # [M]
-    return total - removed
+    m_count = w.shape[0]
+    return lattice_stability_scores(
+        w, mask, cand_latency, cand_batch, jnp.arange(m_count), tau, clip
+    )

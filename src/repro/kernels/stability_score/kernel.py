@@ -1,14 +1,18 @@
 """Candidate stability scoring (paper Eq. 3-7) as a Pallas TPU kernel.
 
-The scheduler evaluates M candidate decisions per round; each candidate m
-rescoreas *every* queued task under the predicted wait shift L_m — an
-O(M^2 * maxQ) fused pass. At edge scale (M ~ 3) this is trivia, but the
-vectorised serving tier (hundreds of colocated models / per-tenant queues)
-makes it a per-round hot spot on the host: fusing exp/clip/mask/row-sum
-into one VMEM pass keeps the scheduling quantum in the microsecond range.
+The scheduler evaluates N candidate decisions per round; each candidate n
+rescores *every* queued task under the predicted wait shift L_n — an
+O(N * M * maxQ) fused pass. Candidates are a flattened (model, exit, batch)
+lattice: ``cand_queue[n]`` names the queue candidate n would serve, so the
+paper's one-candidate-per-queue greedy (N == M, cand_queue == arange) and
+the joint lattice (N == sum over queues of |ladder| * |exits|) share one
+kernel. At edge scale (M ~ 3) this is trivia, but the vectorised serving
+tier (hundreds of colocated models / per-tenant queues) makes it a
+per-round hot spot on the host: fusing exp/clip/mask/row-sum into one VMEM
+pass keeps the scheduling quantum in the microsecond range.
 
-Tiling: grid = (M/bm,); per step the full wait matrix [M, Q] sits in VMEM
-(tens of KB for realistic M*Q) against a [bm] slab of candidates.
+Tiling: grid = (N/bn,); per step the full wait matrix [M, Q] sits in VMEM
+(tens of KB for realistic M*Q) against a [bn] slab of candidates.
 """
 
 from __future__ import annotations
@@ -20,29 +24,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _score_kernel(w_ref, mask_ref, lat_ref, batch_ref, out_ref,
-                  *, tau: float, clip: float, bm: int):
-    ic = pl.program_id(0)
+def _score_kernel(w_ref, mask_ref, lat_ref, batch_ref, queue_ref, out_ref,
+                  *, tau: float, clip: float, bn: int):
     w = w_ref[...].astype(jnp.float32)                  # [M, Q]
     mask = mask_ref[...].astype(jnp.float32)            # [M, Q]
-    lat = lat_ref[...].astype(jnp.float32)              # [bm]
-    batch = batch_ref[...]                              # [bm] int32
+    lat = lat_ref[...].astype(jnp.float32)              # [bn]
+    batch = batch_ref[...]                              # [bn] int32
+    queue = queue_ref[...]                              # [bn] int32
     m_count, q = w.shape
     log_clip = jnp.log(clip)
 
-    # shifted urgency for each candidate in the slab: [bm, M, Q]
+    # shifted urgency for each candidate in the slab: [bn, M, Q]
     shifted = w[None] + lat[:, None, None]
     urg = jnp.minimum(
         jnp.exp(jnp.minimum(shifted / tau - 1.0, log_clip)), clip
     ) * mask[None]
-    total = jnp.sum(urg, axis=(1, 2))                   # [bm]
+    total = jnp.sum(urg, axis=(1, 2))                   # [bn]
 
-    # served tasks (B oldest of the candidate's own queue) are removed
-    slab = jax.lax.broadcasted_iota(jnp.int32, (bm, m_count, q), 0)
-    cand_rows = ic * bm + slab                          # global candidate row
-    row_ids = jax.lax.broadcasted_iota(jnp.int32, (bm, m_count, q), 1)
-    pos_ids = jax.lax.broadcasted_iota(jnp.int32, (bm, m_count, q), 2)
-    own = (row_ids == cand_rows)
+    # served tasks (B oldest of the candidate's target queue) are removed
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (bn, m_count, q), 1)
+    pos_ids = jax.lax.broadcasted_iota(jnp.int32, (bn, m_count, q), 2)
+    own = row_ids == queue[:, None, None]
     served = own & (pos_ids < batch[:, None, None])
     removed = jnp.sum(urg * served.astype(jnp.float32), axis=(1, 2))
 
@@ -50,31 +52,38 @@ def _score_kernel(w_ref, mask_ref, lat_ref, batch_ref, out_ref,
 
 
 def stability_scores_kernel(w, mask, cand_latency, cand_batch,
-                            *, tau: float, clip: float = 10.0,
+                            cand_queue=None, *, tau: float, clip: float = 10.0,
                             block_m: int = 8, interpret: bool = False):
-    """w, mask [M, Q]; cand_latency [M] f32; cand_batch [M] i32 -> [M] f32."""
+    """w, mask [M, Q]; cand_latency [N] f32; cand_batch, cand_queue [N] i32
+    -> [N] f32. ``cand_queue=None`` means the one-candidate-per-queue greedy
+    layout (N == M, candidate n serves queue n)."""
     m, q = w.shape
-    bm = min(block_m, m)
-    # pad M to a multiple of bm
-    pad = (-m) % bm
+    if cand_queue is None:
+        cand_queue = jnp.arange(m, dtype=jnp.int32)
+    n = cand_latency.shape[0]
+    bn = min(block_m, n)
+    # pad N to a multiple of bn (padded candidates score garbage; sliced off)
+    pad = (-n) % bn
     if pad:
         cand_latency = jnp.pad(cand_latency, (0, pad))
         cand_batch = jnp.pad(cand_batch, (0, pad))
-    mp = m + pad
-    grid = (mp // bm,)
+        cand_queue = jnp.pad(cand_queue, (0, pad))
+    np_ = n + pad
+    grid = (np_ // bn,)
 
-    kernel = functools.partial(_score_kernel, tau=tau, clip=clip, bm=bm)
+    kernel = functools.partial(_score_kernel, tau=tau, clip=clip, bn=bn)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((m, q), lambda ic: (0, 0)),
             pl.BlockSpec((m, q), lambda ic: (0, 0)),
-            pl.BlockSpec((bm,), lambda ic: (ic,)),
-            pl.BlockSpec((bm,), lambda ic: (ic,)),
+            pl.BlockSpec((bn,), lambda ic: (ic,)),
+            pl.BlockSpec((bn,), lambda ic: (ic,)),
+            pl.BlockSpec((bn,), lambda ic: (ic,)),
         ],
-        out_specs=pl.BlockSpec((bm,), lambda ic: (ic,)),
-        out_shape=jax.ShapeDtypeStruct((mp,), jnp.float32),
+        out_specs=pl.BlockSpec((bn,), lambda ic: (ic,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
         interpret=interpret,
-    )(w, mask, cand_latency, cand_batch)
-    return out[:m]
+    )(w, mask, cand_latency, cand_batch, cand_queue)
+    return out[:n]

@@ -7,23 +7,33 @@ import functools
 import jax
 
 from repro.kernels.stability_score.kernel import stability_scores_kernel
-from repro.kernels.stability_score.ref import stability_scores_ref
+from repro.kernels.stability_score.ref import (
+    lattice_stability_scores_ref,
+    stability_scores_ref,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("tau", "clip", "block_m",
                                              "interpret", "use_kernel"))
-def stability_scores(w, mask, cand_latency, cand_batch, *, tau: float,
-                     clip: float = 10.0, block_m: int = 8,
+def stability_scores(w, mask, cand_latency, cand_batch, cand_queue=None,
+                     *, tau: float, clip: float = 10.0, block_m: int = 8,
                      interpret: bool = False, use_kernel: bool = True):
-    """Score all M candidate decisions in one fused pass (Eq. 3-7).
+    """Score a flattened candidate lattice in one fused pass (Eq. 3-7).
 
-    w, mask [M, maxQ] (FIFO-sorted waits + validity); cand_latency [M];
-    cand_batch [M]. Returns [M] predicted post-decision stability scores.
+    w, mask [M, maxQ] (FIFO-sorted waits + validity); cand_latency [N];
+    cand_batch [N]; cand_queue [N] maps each candidate to the queue it
+    serves (None = the greedy one-candidate-per-queue layout with N == M).
+    Returns [N] predicted post-decision stability scores.
     """
     if not use_kernel:
-        return stability_scores_ref(w, mask, cand_latency, cand_batch,
-                                    tau, clip)
+        if cand_queue is None:
+            return stability_scores_ref(w, mask, cand_latency, cand_batch,
+                                        tau, clip)
+        return lattice_stability_scores_ref(
+            w, mask, cand_latency, cand_batch, cand_queue, tau, clip)
+    if cand_queue is not None:
+        cand_queue = cand_queue.astype(jax.numpy.int32)
     return stability_scores_kernel(
         w, mask, cand_latency.astype(jax.numpy.float32),
-        cand_batch.astype(jax.numpy.int32),
+        cand_batch.astype(jax.numpy.int32), cand_queue,
         tau=tau, clip=clip, block_m=block_m, interpret=interpret)

@@ -1,7 +1,12 @@
 """Pure-jnp oracle for candidate stability scoring — re-exports the core
 implementation (paper Eq. 3-7) so the kernel tests validate against the
-exact scheduler semantics."""
+exact scheduler semantics. ``stability_scores_ref`` is the greedy
+one-candidate-per-queue layout; ``lattice_stability_scores_ref`` scores a
+flattened (model, exit, batch) lattice via a candidate->queue index map."""
 
-from repro.core.urgency import candidate_stability_scores as stability_scores_ref
+from repro.core.urgency import (
+    candidate_stability_scores as stability_scores_ref,
+    lattice_stability_scores as lattice_stability_scores_ref,
+)
 
-__all__ = ["stability_scores_ref"]
+__all__ = ["stability_scores_ref", "lattice_stability_scores_ref"]

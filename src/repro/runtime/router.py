@@ -80,6 +80,26 @@ class ReplicaRouter:
                 total += table(m, e, rem)
         return total
 
+    @staticmethod
+    def backlog_from_scheduler(scheduler, qlens: Sequence[int],
+                               exit_idx: Optional[int] = None) -> float:
+        """Policy-aware drain estimate: derives batch sizes from the
+        replica scheduler's own candidate ladder (its ``max_batch`` cap,
+        its profile table) instead of caller-supplied constants, so a
+        replica running e.g. a bs=1 ablation or a small-B_max deployment
+        advertises its true (slower) drain time to the router."""
+        table = scheduler.table
+        e = table.num_exits - 1 if exit_idx is None else exit_idx
+        total = 0.0
+        for m, n in enumerate(qlens):
+            while n > 0:
+                # the Eq. 5 cap for this queue state under the policy's
+                # B_max (subclasses like the bs=1 ablation override it)
+                b = scheduler.batch_size(n)
+                total += table(m, e, b)
+                n -= b
+        return total
+
     # -- routing ---------------------------------------------------------------
 
     def _effective_backlog(self, i: int) -> float:

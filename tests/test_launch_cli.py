@@ -1,5 +1,6 @@
 """CLI driver smoke tests (launch/serve.py, launch/train.py plumbing)."""
 
+import os
 import subprocess
 import sys
 
@@ -7,11 +8,17 @@ import pytest
 
 
 def run_cli(args, timeout=420):
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    # A scrubbed env must not change jax backend selection: without e.g.
+    # JAX_PLATFORMS=cpu the subprocess may probe for a TPU and stall in
+    # metadata-retry loops on TPU-less CI hosts.
+    for var in ("JAX_PLATFORMS", "JAX_PLATFORM_NAME", "XLA_FLAGS"):
+        if var in os.environ:
+            env[var] = os.environ[var]
     return subprocess.run(
         [sys.executable, "-m"] + args,
         capture_output=True, text=True, timeout=timeout,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+        env=env,
         cwd=".",
     )
 

@@ -110,7 +110,10 @@ class TestFamilies:
             c = jax.jit(
                 lambda v, b: model.forward_exit(v, b, e)
             ).lower(values, batch).compile()
-            return c.cost_analysis().get("flops", 0.0)
+            ca = c.cost_analysis()
+            if isinstance(ca, (list, tuple)):  # jax < 0.5 returns [dict]
+                ca = ca[0] if ca else {}
+            return ca.get("flops", 0.0)
 
         assert flops(0) < flops(cfg.num_exits - 1)
 
@@ -246,9 +249,12 @@ class TestResNet:
         imgs = jnp.zeros((2, 32, 32, 3))
 
         def flops(e):
-            return jax.jit(
+            ca = jax.jit(
                 lambda v, x: model.forward_exit(v, x, e)
-            ).lower(values, imgs).compile().cost_analysis().get("flops", 0.0)
+            ).lower(values, imgs).compile().cost_analysis()
+            if isinstance(ca, (list, tuple)):  # jax < 0.5 returns [dict]
+                ca = ca[0] if ca else {}
+            return ca.get("flops", 0.0)
 
         f = [flops(e) for e in range(4)]
         assert f[0] < f[1] < f[2] < f[3]

@@ -86,7 +86,9 @@ class TestTableOps:
 
         def run_fn(m, e, b):
             calls.append((m, e, b))
-            time.sleep(0.0001 * (1 + m + e) * (1 + 0.1 * b))
+            # millisecond-scale sleeps: sub-ms ones drown in OS scheduler
+            # jitter and make the exit-ordering assertion below flaky.
+            time.sleep(0.001 * (1 + m + e) * (1 + 0.1 * b))
 
         t = ProfileTable.measure(
             ["m0", "m1"], ["e0", "e1"], [1, 2], run_fn, repeats=3, warmup=1

@@ -253,4 +253,7 @@ class TestShardingRules:
         mesh = self._mesh()
         spec = spec_for_param((64, 128), ("embed", "heads"), train_rules(),
                               mesh)
-        assert spec == P(("data",), "model")
+        # jax versions differ on whether a single-axis entry is normalised
+        # from ("data",) to "data"; compare semantically.
+        norm = tuple(a if isinstance(a, tuple) else (a,) for a in spec)
+        assert norm == (("data",), ("model",))

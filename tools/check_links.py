@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo links in markdown docs.
+
+Checks every ``[text](target)`` in the given markdown files (default:
+README.md, docs/, benchmarks/README.md) whose target is a relative path —
+external http(s)/mailto links are ignored — and verifies the target exists
+relative to the file. Anchors (``path#section``) are checked for path
+existence only.
+
+    python tools/check_links.py            # default doc set
+    python tools/check_links.py FILE...    # explicit files
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def default_docs() -> "list[pathlib.Path]":
+    docs = [REPO / "README.md", REPO / "benchmarks" / "README.md"]
+    docs += sorted((REPO / "docs").glob("**/*.md"))
+    return [d for d in docs if d.exists()]
+
+
+def check(path: pathlib.Path) -> "list[str]":
+    errors = []
+    text = path.read_text()
+    try:
+        display = path.relative_to(REPO)
+    except ValueError:  # explicit file outside the repo root
+        display = path
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            errors.append(f"{display}: broken link -> {target}")
+    return errors
+
+
+def main(argv: "list[str]") -> int:
+    files = [pathlib.Path(a).resolve() for a in argv] or default_docs()
+    errors = []
+    for f in files:
+        errors.extend(check(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
