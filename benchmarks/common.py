@@ -4,20 +4,25 @@ Every benchmark module exposes ``run() -> list[Row]``; ``benchmarks.run``
 aggregates them into the ``name,us_per_call,derived`` CSV. ``us_per_call``
 is the wall-clock microseconds spent producing that row (one serving
 experiment / one kernel call); ``derived`` is the row's headline metric.
+
+Serving sweeps go through ``repro.core.sweep.SweepRunner`` and fan across
+worker processes by default (results are bitwise-identical to serial — see
+``docs/scheduler.md``). ``REPRO_SWEEP_WORKERS=1`` forces serial;
+``REPRO_SWEEP_WORKERS=N`` pins the worker count.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
-from typing import Callable, Iterable, List, Optional
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core import (
     ProfileTable,
-    SchedulerConfig,
-    make_scheduler,
-    paper_rate_vector,
-    run_experiment,
+    ServingMetrics,
+    SweepRunner,
+    SweepSpec,
 )
 
 
@@ -43,6 +48,23 @@ def timed(fn: Callable, *args, **kw):
     return out, (time.perf_counter() - t0) * 1e6
 
 
+def sweep_workers(n_specs: int) -> int:
+    """Worker count for a benchmark sweep: ``REPRO_SWEEP_WORKERS`` if set,
+    else one per CPU, capped at the grid size."""
+    env = os.environ.get("REPRO_SWEEP_WORKERS")
+    if env:
+        return max(1, int(env))
+    return max(1, min(os.cpu_count() or 1, n_specs))
+
+
+def derived_str(m: ServingMetrics) -> str:
+    """The standard headline-metric string shared by all serving rows."""
+    return (
+        f"p95_ms={m.p95_latency*1e3:.2f};viol={m.violation_ratio*100:.2f}%;"
+        f"acc={m.mean_accuracy*100:.2f}%;depth={m.mean_exit_depth:.2f}"
+    )
+
+
 def serving_row(
     name: str,
     scheduler_name: str,
@@ -53,18 +75,40 @@ def serving_row(
     sched_table: Optional[ProfileTable] = None,
     model_map=None,
     horizon: float = HORIZON,
+    seed: int = SEED,
+    max_batch: int = 10,
+    scenario: str = "poisson",
+    warmup_tasks: int = 100,
 ) -> "tuple[Row, object]":
-    """One serving experiment -> CSV row + metrics."""
-    cfg = SchedulerConfig(slo=slo, max_batch=10)
-    sched = make_scheduler(scheduler_name, sched_table or table, cfg)
-    res, us = timed(
-        run_experiment, sched, table,
-        rates if rates is not None else paper_rate_vector(lam),
-        horizon=horizon, seed=SEED, model_map=model_map,
+    """One serving experiment -> CSV row + metrics (a single sweep cell)."""
+    runner = SweepRunner(table, sched_table=sched_table, model_map=model_map)
+    spec = SweepSpec(
+        policy=scheduler_name,
+        scenario=scenario,
+        rate=lam,
+        seed=seed,
+        slo=slo,
+        max_batch=max_batch,
+        horizon=horizon,
+        warmup_tasks=warmup_tasks,
+        rates=None if rates is None else tuple(rates),
+        label=name,
     )
-    m = res.metrics
-    derived = (
-        f"p95_ms={m.p95_latency*1e3:.2f};viol={m.violation_ratio*100:.2f}%;"
-        f"acc={m.mean_accuracy*100:.2f}%;depth={m.mean_exit_depth:.2f}"
-    )
-    return Row(name, us, derived), m
+    res = runner.run_cell(spec)
+    return Row(name, res.us_per_call, derived_str(res.metrics)), res.metrics
+
+
+def sweep_rows(
+    runner: SweepRunner,
+    specs: Sequence[SweepSpec],
+    workers: Optional[int] = None,
+) -> List[Tuple[Row, ServingMetrics]]:
+    """Run a sweep grid (parallel by default) -> (Row, metrics) per cell,
+    in grid order. Row names come from each spec's ``label``/``title()``."""
+    if workers is None:
+        workers = sweep_workers(len(specs))
+    results = runner.run(specs, workers=workers)
+    return [
+        (Row(r.spec.title(), r.us_per_call, derived_str(r.metrics)), r.metrics)
+        for r in results
+    ]

@@ -11,34 +11,42 @@ queue urgency and lowers the violation ratio at high load.
 
 Each (slo, policy) sweep ends with a ``summary`` row carrying the mean
 violation ratio across the sweep — the headline lattice-vs-greedy number.
+The whole grid runs through the parallel ``SweepRunner``.
 """
 
 from __future__ import annotations
 
 from typing import List
 
-from repro.core import ProfileTable
-from benchmarks.common import LAMBDAS, Row, serving_row
+from repro.core import ProfileTable, SweepRunner, SweepSpec
+from benchmarks.common import HORIZON, LAMBDAS, Row, SEED, sweep_rows
 
 SLOS = (0.030, 0.050)
+POLICIES = ("edgeserving", "edgeserving-lattice")
 KNEE = 4
 
 
 def run() -> List[Row]:
     table = ProfileTable.paper_rtx3080().with_batch_saturation(KNEE)
+    specs = [
+        SweepSpec(policy=sched, rate=lam, slo=slo, seed=SEED, horizon=HORIZON,
+                  label=f"fig12/{sched}/slo{int(slo*1e3)}ms/lam{lam:g}")
+        for slo in SLOS
+        for sched in POLICIES
+        for lam in LAMBDAS
+    ]
+    results = sweep_rows(SweepRunner(table), specs)
+
+    # Grid order is (slo, policy, lambda): chunk per (slo, policy) sweep and
+    # append its mean-violation summary row.
     rows: List[Row] = []
-    for slo in SLOS:
-        slo_ms = int(slo * 1e3)
-        for sched in ("edgeserving", "edgeserving-lattice"):
-            viols = []
-            for lam in LAMBDAS:
-                row, m = serving_row(
-                    f"fig12/{sched}/slo{slo_ms}ms/lam{lam}", sched, table,
-                    lam, slo=slo)
-                rows.append(row)
-                viols.append(m.violation_ratio)
-            mean_viol = sum(viols) / len(viols)
-            rows.append(Row(
-                f"fig12/{sched}/slo{slo_ms}ms/summary", 0.0,
-                f"mean_viol={mean_viol*100:.3f}%"))
+    n_lam = len(LAMBDAS)
+    for i in range(0, len(results), n_lam):
+        chunk = results[i:i + n_lam]
+        rows.extend(row for row, _ in chunk)
+        spec = specs[i]
+        mean_viol = sum(m.violation_ratio for _, m in chunk) / n_lam
+        rows.append(Row(
+            f"fig12/{spec.policy}/slo{int(spec.slo*1e3)}ms/summary", 0.0,
+            f"mean_viol={mean_viol*100:.3f}%"))
     return rows

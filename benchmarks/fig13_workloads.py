@@ -1,0 +1,67 @@
+"""Beyond-paper Fig. 13: scheduling policies across workload scenarios.
+
+The paper evaluates only stationary Poisson arrivals with one global SLO;
+this sweep runs EdgeServing (greedy and lattice) against the All-Final and
+Symphony baselines under every registered arrival process — stationary
+Poisson, MMPP on-off bursts, a diurnal cycle, a flash crowd, and a replayed
+MMPP trace — plus a heterogeneous-SLO leg where each queue carries its own
+deadline. One row per (policy, scenario) cell reports the violation ratio,
+P95 latency, and the per-model violation breakdown (``viol_by_model``),
+which is where bursty-queue damage shows up even when the aggregate looks
+healthy.
+
+The grid fans across worker processes via ``SweepRunner``; set
+``REPRO_FIG13_SMOKE=1`` (CI) for a 1-scenario, tiny-horizon smoke run.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List
+
+from repro.core import ProfileTable, ServingMetrics, SweepRunner, SweepSpec
+from benchmarks.common import HORIZON, Row, SEED, derived_str, sweep_rows
+
+LAM = 160.0
+POLICIES = ("edgeserving", "edgeserving-lattice", "all-final", "symphony")
+SCENARIOS = ("poisson", "mmpp", "diurnal", "flash-crowd", "trace-replay")
+HET_DEADLINES = (0.030, 0.050, 0.070)  # per-queue SLO vector for the het leg
+
+
+def _derived(m: ServingMetrics) -> str:
+    by_model = "|".join(
+        f"m{pm.model}:{pm.violation_ratio*100:.1f}%" for pm in m.per_model
+    )
+    return f"{derived_str(m)};viol_by_model={by_model}"
+
+
+def _specs() -> List[SweepSpec]:
+    smoke = bool(os.environ.get("REPRO_FIG13_SMOKE"))
+    policies = ("edgeserving", "all-final") if smoke else POLICIES
+    scenarios = ("mmpp",) if smoke else SCENARIOS
+    horizon = 2.0 if smoke else HORIZON
+    warmup = 20 if smoke else 100
+    specs = [
+        SweepSpec(policy=p, scenario=sc, rate=LAM, seed=SEED, horizon=horizon,
+                  warmup_tasks=warmup, label=f"fig13/{sc}/{p}")
+        for sc in scenarios
+        for p in policies
+    ]
+    if not smoke:
+        # Heterogeneous-SLO leg: stationary arrivals, per-queue deadlines.
+        specs += [
+            SweepSpec(policy=p, scenario="poisson", rate=LAM, seed=SEED,
+                      horizon=horizon, warmup_tasks=warmup,
+                      deadlines=HET_DEADLINES, label=f"fig13/het-slo/{p}")
+            for p in policies
+        ]
+    return specs
+
+
+def run() -> List[Row]:
+    table = ProfileTable.paper_rtx3080()
+    results = sweep_rows(SweepRunner(table), _specs())
+    return [
+        Row(row.name, row.us_per_call, _derived(metrics))
+        for row, metrics in results
+    ]

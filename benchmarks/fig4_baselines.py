@@ -1,19 +1,20 @@
 """Paper Fig. 4: P95 latency + SLO violation ratio vs traffic intensity for
-All-Final / All-Early / Symphony / EdgeServing."""
+All-Final / All-Early / Symphony / EdgeServing (parallel sweep)."""
 
 from __future__ import annotations
 
 from typing import List
 
-from repro.core import ProfileTable
-from benchmarks.common import LAMBDAS, Row, serving_row
+from repro.core import ProfileTable, SweepRunner, SweepSpec
+from benchmarks.common import HORIZON, LAMBDAS, Row, SEED, sweep_rows
 
 
 def run() -> List[Row]:
     table = ProfileTable.paper_rtx3080()
-    rows = []
-    for sched in ("edgeserving", "all-final", "all-early", "symphony"):
-        for lam in LAMBDAS:
-            row, _ = serving_row(f"fig4/{sched}/lam{lam}", sched, table, lam)
-            rows.append(row)
-    return rows
+    specs = [
+        SweepSpec(policy=sched, rate=lam, seed=SEED, horizon=HORIZON,
+                  label=f"fig4/{sched}/lam{lam:g}")
+        for sched in ("edgeserving", "all-final", "all-early", "symphony")
+        for lam in LAMBDAS
+    ]
+    return [row for row, _ in sweep_rows(SweepRunner(table), specs)]

@@ -1,21 +1,21 @@
 """Paper Fig. 8: SLO-threshold sensitivity (tau in 20..70 ms): P95 scales
-with the SLO; violations stay controlled."""
+with the SLO; violations stay controlled (parallel sweep)."""
 
 from __future__ import annotations
 
 from typing import List
 
-from repro.core import ProfileTable
-from benchmarks.common import Row, serving_row
+from repro.core import ProfileTable, SweepRunner, SweepSpec
+from benchmarks.common import HORIZON, Row, SEED, sweep_rows
 
 
 def run() -> List[Row]:
     table = ProfileTable.paper_rtx3080()
-    rows = []
-    for slo_ms in (20, 30, 40, 50, 60, 70):
-        for lam in (100, 200):
-            row, m = serving_row(
-                f"fig8/slo{slo_ms}ms/lam{lam}", "edgeserving", table, lam,
-                slo=slo_ms * 1e-3)
-            rows.append(row)
-    return rows
+    specs = [
+        SweepSpec(policy="edgeserving", rate=lam, slo=slo_ms * 1e-3,
+                  seed=SEED, horizon=HORIZON,
+                  label=f"fig8/slo{slo_ms}ms/lam{lam}")
+        for slo_ms in (20, 30, 40, 50, 60, 70)
+        for lam in (100, 200)
+    ]
+    return [row for row, _ in sweep_rows(SweepRunner(table), specs)]

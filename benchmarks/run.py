@@ -22,6 +22,7 @@ from benchmarks import (
     fig10_cross_platform,
     fig11_ablation,
     fig12_lattice,
+    fig13_workloads,
     micro_kernels,
     micro_scheduler,
     table1_accuracy,
@@ -39,6 +40,7 @@ MODULES = {
     "fig10": fig10_cross_platform,
     "fig11": fig11_ablation,
     "fig12": fig12_lattice,
+    "fig13": fig13_workloads,
     "micro_scheduler": micro_scheduler,
     "micro_kernels": micro_kernels,
 }

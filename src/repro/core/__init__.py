@@ -18,7 +18,7 @@ from repro.core.baselines import (
     SymphonyScheduler,
     make_scheduler,
 )
-from repro.core.metrics import ServingMetrics, summarize
+from repro.core.metrics import ModelMetrics, ServingMetrics, summarize
 from repro.core.profile import ProfileTable
 from repro.core.queues import QueueSnapshot, ServiceQueue
 from repro.core.request import Completion, Decision, Request, ServingTrace
@@ -30,7 +30,21 @@ from repro.core.scheduler import (
     VectorizedEdgeServingScheduler,
 )
 from repro.core.simulator import ServingSimulator, SimResult, run_experiment
+from repro.core.sweep import SweepResult, SweepRunner, SweepSpec
 from repro.core.traffic import paper_rate_vector, poisson_arrivals
+from repro.core.workloads import (
+    SCENARIOS,
+    ArrivalProcess,
+    DiurnalProcess,
+    FlashCrowdProcess,
+    MMPPProcess,
+    PoissonProcess,
+    TraceReplayProcess,
+    burstiness_index,
+    interarrival_cov,
+    make_scenario,
+    record_trace,
+)
 from repro.core.urgency import (
     DEFAULT_CLIP,
     candidate_stability_scores,
@@ -42,18 +56,25 @@ from repro.core.urgency import (
 )
 
 __all__ = [
+    "SCENARIOS",
     "SCHEDULERS",
     "AllEarlyScheduler",
     "AllFinalDeadlineAwareScheduler",
     "AllFinalScheduler",
+    "ArrivalProcess",
     "Completion",
     "Decision",
     "DEFAULT_CLIP",
+    "DiurnalProcess",
     "EarlyExitEDFScheduler",
     "EarlyExitLQFScheduler",
     "EdgeServingScheduler",
+    "FlashCrowdProcess",
     "LatticeEdgeServingScheduler",
+    "MMPPProcess",
+    "ModelMetrics",
     "NoBatchingScheduler",
+    "PoissonProcess",
     "ProfileTable",
     "QueueSnapshot",
     "Request",
@@ -64,13 +85,21 @@ __all__ = [
     "ServingSimulator",
     "ServingTrace",
     "SimResult",
+    "SweepResult",
+    "SweepRunner",
+    "SweepSpec",
     "SymphonyScheduler",
+    "TraceReplayProcess",
     "VectorizedEdgeServingScheduler",
+    "burstiness_index",
     "candidate_stability_scores",
+    "interarrival_cov",
     "lattice_stability_scores",
+    "make_scenario",
     "make_scheduler",
     "paper_rate_vector",
     "poisson_arrivals",
+    "record_trace",
     "run_experiment",
     "stability_score",
     "stability_score_np",

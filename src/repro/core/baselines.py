@@ -93,7 +93,8 @@ class SymphonyScheduler(Scheduler):
         if batch >= self.config.max_batch:
             return True  # full batch: deferring further cannot help throughput
         lat = self.table(m, self._final, batch)
-        return snapshot.w_max(m) + lat >= self.config.slo - self.headroom
+        tau = snapshot.oldest_tau(m, self.config.slo)
+        return snapshot.w_max(m) + lat >= tau - self.headroom
 
     def decide(self, snapshot: QueueSnapshot) -> Optional[Decision]:
         nonempty = snapshot.nonempty()
@@ -105,7 +106,7 @@ class SymphonyScheduler(Scheduler):
         # earliest effective deadline first among due queues
         m = min(
             due,
-            key=lambda i: self.config.slo
+            key=lambda i: snapshot.oldest_tau(i, self.config.slo)
             - snapshot.w_max(i)
             - self.table(i, self._final, self.batch_size(snapshot.qlen(i))),
         )
@@ -123,7 +124,8 @@ class SymphonyScheduler(Scheduler):
         for m in snapshot.nonempty():
             batch = self.batch_size(snapshot.qlen(m))
             lat = self.table(m, self._final, batch)
-            slack = self.config.slo - self.headroom - lat - snapshot.w_max(m)
+            tau = snapshot.oldest_tau(m, self.config.slo)
+            slack = tau - self.headroom - lat - snapshot.w_max(m)
             wakes.append(snapshot.now + max(slack, 0.0))
         return min(wakes) if wakes else None
 
@@ -133,7 +135,13 @@ class SymphonyScheduler(Scheduler):
         drops = []
         for m in snapshot.nonempty():
             w = snapshot.waits[m]  # FIFO order: oldest (largest wait) first
-            n = int(np.searchsorted(-w, -self.config.slo, side="left"))
+            if snapshot.has_deadlines:
+                # Per-task deadlines: shed the expired FIFO prefix (pop_batch
+                # can only remove the oldest tasks).
+                expired = w > snapshot.taus(m, self.config.slo)
+                n = len(w) if expired.all() else int(np.argmin(expired))
+            else:
+                n = int(np.searchsorted(-w, -self.config.slo, side="left"))
             if n > 0:
                 drops.append((m, n))
         return drops
@@ -166,7 +174,11 @@ class EarlyExitEDFScheduler(Scheduler):
         nonempty = snapshot.nonempty()
         if not nonempty:
             return None
-        m = min(nonempty, key=lambda i: self.config.slo - snapshot.w_max(i))
+        m = min(
+            nonempty,
+            key=lambda i: snapshot.oldest_tau(i, self.config.slo)
+            - snapshot.w_max(i),
+        )
         batch, exit_idx, lat = self.candidate(snapshot, m)
         return Decision(m, exit_idx, batch, lat)
 

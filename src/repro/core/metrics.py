@@ -13,6 +13,24 @@ from repro.core.request import Completion
 
 
 @dataclasses.dataclass(frozen=True)
+class ModelMetrics:
+    """Per-model (per-queue) breakdown of a serving window.
+
+    Bursty workloads concentrate damage on individual queues; the aggregate
+    violation ratio hides which queue absorbed it. One entry per model index
+    in ``ServingMetrics.per_model`` makes it visible.
+    """
+
+    model: int
+    num_completed: int
+    violation_ratio: float
+    p50_latency: float
+    p95_latency: float
+    mean_queueing: float
+    mean_exit_depth: float
+
+
+@dataclasses.dataclass(frozen=True)
 class ServingMetrics:
     """Aggregate results over a serving window (post-warmup completions)."""
 
@@ -30,6 +48,8 @@ class ServingMetrics:
     mean_batch: float
     residual_queue: int             # tasks still queued at the end (overload)
     dropped: int = 0                # shed requests (Symphony); count as violations
+    warmup_used: int = 0            # completions actually excluded (post-clamp)
+    per_model: "tuple[ModelMetrics, ...]" = ()
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -51,8 +71,13 @@ def summarize(
     Args:
       completions: completion records ordered by finish time.
       table:       profile table used for accuracy lookup.
-      slo:         deadline tau in seconds.
-      warmup_tasks: paper excludes the first 100 completed tasks.
+      slo:         deadline tau in seconds (fallback when a completion has no
+                   per-request ``deadline`` of its own).
+      warmup_tasks: paper excludes the first 100 completed tasks. For runs
+                   shorter than the warmup this is clamped to half the
+                   completion count, so a short run reports honest non-zero
+                   metrics instead of silently collapsing to all zeros; the
+                   exclusion actually applied is surfaced as ``warmup_used``.
       busy_time:   accelerator-occupied seconds (for utilisation).
       span:        wall-clock span of the experiment in seconds.
       model_map:   optional mapping completion.model -> profile row (used by
@@ -60,22 +85,50 @@ def summarize(
       dropped:     shed requests; counted as violations (a dropped request
                    certainly misses its deadline).
     """
-    done = list(completions)[warmup_tasks:]
+    completions = list(completions)
+    if warmup_tasks >= len(completions):
+        warmup_tasks = len(completions) // 2
+    done = completions[warmup_tasks:]
     if not done:
-        return ServingMetrics(0, 0.0, *([0.0] * 9), residual_queue, dropped)
+        return ServingMetrics(
+            num_completed=0, violation_ratio=0.0, p50_latency=0.0,
+            p95_latency=0.0, p99_latency=0.0, mean_latency=0.0,
+            mean_queueing=0.0, mean_exit_depth=0.0, mean_accuracy=0.0,
+            throughput=0.0, utilization=0.0, mean_batch=0.0,
+            residual_queue=residual_queue, dropped=dropped, warmup_used=0,
+        )
     lat = np.array([c.total_latency for c in done])
     queue = np.array([c.queueing for c in done])
     exits = np.array([c.exit_idx for c in done])
     batches = np.array([c.batch_size for c in done])
+    models = np.array([c.model for c in done])
+    taus = np.array(
+        [slo if c.deadline is None else c.deadline for c in done]
+    )
     rows = (
         np.array([model_map[c.model] for c in done])
         if model_map is not None
-        else np.array([c.model for c in done])
+        else models
     )
     acc = table.accuracy[rows, exits]
     if np.all(np.isnan(acc)):  # measured tables may carry no accuracy data
         acc = np.zeros_like(acc)
-    late = int(np.sum(lat > slo))
+    violated = lat > taus
+    late = int(np.sum(violated))
+
+    per_model = []
+    for m in np.unique(models):
+        sel = models == m
+        per_model.append(ModelMetrics(
+            model=int(m),
+            num_completed=int(sel.sum()),
+            violation_ratio=float(violated[sel].mean()),
+            p50_latency=float(np.percentile(lat[sel], 50)),
+            p95_latency=float(np.percentile(lat[sel], 95)),
+            mean_queueing=float(queue[sel].mean()),
+            mean_exit_depth=float(exits[sel].mean() + 1.0),
+        ))
+
     return ServingMetrics(
         num_completed=len(done),
         violation_ratio=float((late + dropped) / (len(done) + dropped)),
@@ -91,4 +144,6 @@ def summarize(
         mean_batch=float(batches.mean()),
         residual_queue=residual_queue,
         dropped=dropped,
+        warmup_used=warmup_tasks,
+        per_model=tuple(per_model),
     )

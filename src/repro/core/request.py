@@ -20,12 +20,19 @@ class Request:
       model:     index of the target model queue in ``[0, M)``.
       arrival:   arrival wall-clock time in seconds.
       data_id:   opaque payload index (e.g. CIFAR test index / prompt id).
+      deadline:  optional per-request latency budget in seconds (relative to
+                 ``arrival``). ``None`` means "use the global SLO tau" — the
+                 paper's single-deadline setting. Workload scenarios attach
+                 per-queue SLO vectors here (see ``repro.core.workloads``),
+                 and the value flows through snapshot urgency, Eq. 6
+                 feasibility, and violation accounting end to end.
     """
 
     req_id: int
     model: int
     arrival: float
     data_id: int = 0
+    deadline: Optional[float] = None
 
 
 @dataclasses.dataclass(slots=True)
@@ -65,6 +72,7 @@ class Completion:
     finish: float
     exit_idx: int
     batch_size: int
+    deadline: Optional[float] = None  # per-request SLO override (seconds)
 
     @property
     def queueing(self) -> float:
@@ -79,7 +87,10 @@ class Completion:
         return self.finish - self.arrival
 
     def violates(self, slo: float) -> bool:
-        return self.total_latency > slo
+        """Deadline check: the request's own deadline wins over the global
+        ``slo`` when set (heterogeneous-SLO workloads)."""
+        tau = self.deadline if self.deadline is not None else slo
+        return self.total_latency > tau
 
 
 @dataclasses.dataclass(slots=True)

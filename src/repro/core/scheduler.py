@@ -92,7 +92,9 @@ class Scheduler:
         rungs.add(cap)
         return tuple(sorted(rungs, reverse=True))
 
-    def select_exit(self, m: int, w_max: float, batch: int) -> Tuple[int, float]:
+    def select_exit(
+        self, m: int, w_max: float, batch: int, tau: Optional[float] = None
+    ) -> Tuple[int, float]:
         """Eq. 6: deepest allowed exit with ``w_max + L(m,e,B) <= tau``.
 
         Falls back to the *shallowest* allowed exit when no exit is feasible
@@ -100,9 +102,13 @@ class Scheduler:
         collateral damage to other queues — paper Sec. VI-D shows the fast
         fallback exit is what sustains SLO compliance).
 
+        ``tau`` defaults to the global SLO; heterogeneous-SLO workloads pass
+        the head-of-line task's own deadline (``snapshot.oldest_tau``).
+
         Returns: (exit_idx, L(m, exit_idx, batch)).
         """
-        tau = self.config.slo
+        if tau is None:
+            tau = self.config.slo
         for e in reversed(self._exits):
             lat = self.table(m, e, batch)
             if w_max + lat <= tau:
@@ -111,9 +117,13 @@ class Scheduler:
         return e0, self.table(m, e0, batch)
 
     def candidate(self, snapshot: QueueSnapshot, m: int) -> Tuple[int, int, float]:
-        """(B*, e*, L) for queue ``m`` under Eq. 5 + Eq. 6."""
+        """(B*, e*, L) for queue ``m`` under Eq. 5 + Eq. 6 (the oldest task's
+        own deadline bounds feasibility under heterogeneous SLOs)."""
         batch = self.batch_size(snapshot.qlen(m))
-        exit_idx, lat = self.select_exit(m, snapshot.w_max(m), batch)
+        exit_idx, lat = self.select_exit(
+            m, snapshot.w_max(m), batch,
+            tau=snapshot.oldest_tau(m, self.config.slo),
+        )
         return batch, exit_idx, lat
 
     # -- policy ---------------------------------------------------------------
@@ -141,6 +151,8 @@ class EdgeServingScheduler(Scheduler):
         if not nonempty:
             return None
         tau, clip = self.config.slo, self.config.clip
+        het = snapshot.has_deadlines  # per-task tau arrays (scalar otherwise)
+        taus = {m: snapshot.taus(m, tau) for m in nonempty} if het else None
 
         # Urgency is additive across queues, so precompute per-queue wait
         # arrays once; each candidate shifts *all* surviving tasks by L_m.
@@ -152,10 +164,13 @@ class EdgeServingScheduler(Scheduler):
             score = 0.0
             for m2 in nonempty:
                 w = snapshot.waits[m2]
+                t = taus[m2] if het else tau
                 if m2 == m:
                     w = w[batch:]  # FIFO: the batch oldest tasks are served
+                    if het:
+                        t = t[batch:]
                 if len(w):
-                    score += float(urgency_np(w + lat, tau, clip).sum())
+                    score += float(urgency_np(w + lat, t, clip).sum())
             if (
                 best is None
                 or score < best.stability_score
@@ -191,6 +206,9 @@ class VectorizedEdgeServingScheduler(Scheduler):
         tau, clip = self.config.slo, self.config.clip
         w, mask = snapshot.padded()
         m_count, max_q = w.shape
+        # Scalar tau unless the snapshot carries per-task deadlines; the
+        # [M, maxQ] matrix broadcasts over the candidate axis below.
+        tau_b = snapshot.padded_taus(tau)[None, :, :] if snapshot.has_deadlines else tau
 
         batches = np.zeros(m_count, dtype=np.int64)
         exits = np.zeros(m_count, dtype=np.int64)
@@ -200,7 +218,7 @@ class VectorizedEdgeServingScheduler(Scheduler):
 
         shifted = w[None, :, :] + lats[:, None, None]
         urg = np.minimum(
-            np.exp(np.minimum(shifted / tau - 1.0, np.log(clip))), clip
+            np.exp(np.minimum(shifted / tau_b - 1.0, np.log(clip))), clip
         ) * mask[None, :, :]
         total = urg.sum(axis=(1, 2))
         pos = np.arange(max_q)[None, :]
@@ -277,8 +295,9 @@ class LatticeEdgeServingScheduler(Scheduler):
         wmaxes: List[float] = []
         for m in snapshot.nonempty():
             w_max = snapshot.w_max(m)
+            tau_m = snapshot.oldest_tau(m, self.config.slo)
             for b in self.batch_candidates(snapshot.qlen(m)):
-                e, lat = self.select_exit(m, w_max, b)
+                e, lat = self.select_exit(m, w_max, b, tau=tau_m)
                 queues.append(m)
                 batches.append(b)
                 exits.append(e)
@@ -301,13 +320,14 @@ class LatticeEdgeServingScheduler(Scheduler):
         tau, clip = self.config.slo, self.config.clip
         w, mask = snapshot.padded()
         max_q = w.shape[1]
+        tau_b = snapshot.padded_taus(tau)[None, :, :] if snapshot.has_deadlines else tau
 
         # One [N, M, maxQ] scoring pass — op-for-op identical to
         # VectorizedEdgeServingScheduler so the restricted lattice is
         # bitwise-equivalent (and to the Pallas lattice kernel semantics).
         shifted = w[None, :, :] + lats[:, None, None]
         urg = np.minimum(
-            np.exp(np.minimum(shifted / tau - 1.0, np.log(clip))), clip
+            np.exp(np.minimum(shifted / tau_b - 1.0, np.log(clip))), clip
         ) * mask[None, :, :]
         total = urg.sum(axis=(1, 2))
         pos = np.arange(max_q)[None, :]

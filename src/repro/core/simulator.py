@@ -143,6 +143,7 @@ class ServingSimulator:
                         finish=t_end,
                         exit_idx=decision.exit_idx,
                         batch_size=decision.batch_size,
+                        deadline=req.deadline,
                     )
                 )
             if keep_traces:
@@ -179,9 +180,17 @@ def run_experiment(
     service_noise_cov: float = 0.0,
     model_map: Optional[Sequence[int]] = None,
     keep_traces: bool = False,
+    process: Optional[object] = None,
 ) -> SimResult:
-    """One full serving experiment: Poisson arrivals -> simulate -> metrics."""
-    arrivals = poisson_arrivals(rates, horizon, seed=seed)
+    """One full serving experiment: arrivals -> simulate -> metrics.
+
+    ``process`` is an optional ``repro.core.workloads.ArrivalProcess``; the
+    default is the paper's stationary Poisson traffic at ``rates``.
+    """
+    if process is not None:
+        arrivals = process.generate(horizon, seed=seed)
+    else:
+        arrivals = poisson_arrivals(rates, horizon, seed=seed)
     sim = ServingSimulator(
         scheduler,
         table,

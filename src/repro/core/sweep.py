@@ -1,0 +1,198 @@
+"""Parallel sweep harness for serving experiments.
+
+Every paper figure is a grid sweep — (policy × scenario × seed × rate) —
+and until now every ``benchmarks/fig*.py`` ran it single-process, one
+simulation at a time. :class:`SweepRunner` fans the grid across worker
+processes while guaranteeing that **parallel results are bitwise-identical
+to serial**:
+
+  * each grid cell is hermetic: the arrival trace, the scheduler, and the
+    simulator's noise stream are all re-seeded inside the cell from the
+    cell's own :class:`SweepSpec` (no shared PRNG stream whose consumption
+    order could depend on scheduling);
+  * results are returned in grid order regardless of completion order;
+  * workers are plain ``ProcessPoolExecutor`` processes using the ``spawn``
+    start method (fork-safety: the parent may hold live JAX/XLA threads).
+
+``ServingMetrics`` is a frozen dataclass of floats/ints/tuples, so
+"bitwise-identical" is checked with plain ``==`` (asserted in
+``tests/test_sweep.py``).
+
+Typical use (see ``benchmarks/common.sweep_rows`` for the benchmark glue)::
+
+    runner = SweepRunner(ProfileTable.paper_rtx3080())
+    specs = runner.grid(policies=("edgeserving", "all-final"),
+                        scenarios=("poisson", "mmpp"),
+                        rates=(100.0, 200.0), seeds=(7,))
+    results = runner.run(specs, workers=8)   # == runner.run(specs, workers=1)
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import itertools
+import multiprocessing
+import os
+import time
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.baselines import make_scheduler
+from repro.core.metrics import ServingMetrics
+from repro.core.profile import ProfileTable
+from repro.core.scheduler import SchedulerConfig
+from repro.core.simulator import ServingSimulator
+from repro.core.traffic import paper_rate_vector
+from repro.core.workloads import make_scenario
+
+__all__ = ["SweepSpec", "SweepResult", "SweepRunner"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """One hermetic grid cell: everything that varies across a sweep.
+
+    ``rate`` is the paper's scalar traffic intensity (λ₁₅₂), expanded through
+    ``paper_rate_vector``; pass an explicit per-model ``rates`` tuple to
+    override. ``scenario`` names a ``repro.core.workloads.SCENARIOS`` entry;
+    ``scenario_kwargs`` (a tuple of (key, value) pairs, to stay hashable)
+    parameterises it. ``deadlines`` is an optional per-model SLO vector.
+    """
+
+    policy: str
+    scenario: str = "poisson"
+    rate: float = 100.0
+    seed: int = 7
+    slo: float = 0.050
+    max_batch: int = 10
+    horizon: float = 10.0
+    warmup_tasks: int = 100
+    rates: Optional[Tuple[float, ...]] = None
+    deadlines: Optional[Tuple[float, ...]] = None
+    scenario_kwargs: Tuple[Tuple[str, object], ...] = ()
+    label: str = ""
+
+    def rate_vector(self) -> List[float]:
+        if self.rates is not None:
+            return list(self.rates)
+        return paper_rate_vector(self.rate)
+
+    def title(self) -> str:
+        return self.label or (
+            f"{self.policy}/{self.scenario}/lam{self.rate:g}/seed{self.seed}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    spec: SweepSpec
+    metrics: ServingMetrics
+    us_per_call: float  # wall microseconds spent on this cell (in its worker)
+
+
+def _run_cell(runner: "SweepRunner", spec: SweepSpec) -> SweepResult:
+    """Module-level trampoline so the pool can pickle the call."""
+    return runner.run_cell(spec)
+
+
+class SweepRunner:
+    """Fans a sweep grid across processes; serial ≡ parallel, bitwise.
+
+    The runner holds the per-sweep invariants (execution table, optional
+    restricted scheduler table, deployment map, service-noise CoV); the
+    :class:`SweepSpec` holds everything that varies cell to cell. Both are
+    picklable, which is the only requirement for the process fan-out.
+    """
+
+    def __init__(
+        self,
+        table: ProfileTable,
+        sched_table: Optional[ProfileTable] = None,
+        model_map: Optional[Sequence[int]] = None,
+        service_noise_cov: float = 0.0,
+        data_pool: int = 10_000,
+    ):
+        self.table = table
+        self.sched_table = sched_table
+        self.model_map = list(model_map) if model_map is not None else None
+        self.service_noise_cov = service_noise_cov
+        self.data_pool = data_pool
+
+    # -- grid construction ---------------------------------------------------
+
+    def grid(
+        self,
+        policies: Sequence[str],
+        scenarios: Sequence[str] = ("poisson",),
+        rates: Sequence[float] = (100.0,),
+        seeds: Sequence[int] = (7,),
+        **common,
+    ) -> List[SweepSpec]:
+        """The full (policy × scenario × rate × seed) product, in that
+        nesting order; ``common`` fixes the remaining SweepSpec fields.
+
+        Policies sharing a (scenario, rate, seed) cell see identical arrival
+        traces — sweeps are paired comparisons by construction.
+        """
+        return [
+            SweepSpec(policy=p, scenario=sc, rate=r, seed=s, **common)
+            for p, sc, r, s in itertools.product(policies, scenarios, rates, seeds)
+        ]
+
+    # -- execution -----------------------------------------------------------
+
+    def run_cell(self, spec: SweepSpec) -> SweepResult:
+        """One serving experiment, fully determined by (runner, spec)."""
+        t0 = time.perf_counter()
+        rates = spec.rate_vector()
+        cfg = SchedulerConfig(slo=spec.slo, max_batch=spec.max_batch)
+        sched = make_scheduler(spec.policy, self.sched_table or self.table, cfg)
+        process = make_scenario(
+            spec.scenario, rates, deadlines=spec.deadlines,
+            **dict(spec.scenario_kwargs),
+        )
+        arrivals = process.generate(
+            spec.horizon, seed=spec.seed, data_pool=self.data_pool
+        )
+        sim = ServingSimulator(
+            sched,
+            self.table,
+            num_models=len(rates),
+            service_noise_cov=self.service_noise_cov,
+            model_map=self.model_map,
+            seed=spec.seed,
+        )
+        res = sim.run(arrivals, spec.horizon, warmup_tasks=spec.warmup_tasks)
+        us = (time.perf_counter() - t0) * 1e6
+        return SweepResult(spec, res.metrics, us)
+
+    def run(
+        self, specs: Sequence[SweepSpec], workers: Optional[int] = 1
+    ) -> List[SweepResult]:
+        """Run the grid; results are in ``specs`` order.
+
+        ``workers=1`` runs serially in-process; ``workers=None`` uses one
+        worker per CPU (capped at the grid size). Parallel output is
+        bitwise-identical to serial — only ``us_per_call`` (wall timing)
+        differs between runs.
+
+        Like any ``spawn``-based multiprocessing client, ``workers > 1``
+        needs an importable ``__main__`` (a script or pytest — not a REPL
+        heredoc).
+        """
+        specs = list(specs)
+        if not specs:
+            return []
+        if workers is None:
+            workers = os.cpu_count() or 1
+        workers = max(1, min(int(workers), len(specs)))
+        if workers == 1:
+            return [self.run_cell(s) for s in specs]
+        # spawn, not fork: the parent typically holds live JAX/XLA threads
+        # whose locks a forked child would inherit mid-flight.
+        ctx = multiprocessing.get_context("spawn")
+        with concurrent.futures.ProcessPoolExecutor(
+            max_workers=workers, mp_context=ctx
+        ) as pool:
+            futures = [pool.submit(_run_cell, self, s) for s in specs]
+            return [f.result() for f in futures]

@@ -4,15 +4,20 @@ Arrivals to each service queue are independent Poisson point processes.
 The paper's default rate ratio is ``lambda_50 : lambda_101 : lambda_152
 = 3 : 2 : 1`` (lighter models receive heavier traffic); the model-combination
 study uses equal rates.
+
+This module is the import-compatible facade over the workload subsystem:
+``poisson_arrivals`` now delegates to
+:class:`repro.core.workloads.PoissonProcess` (same algorithm, identical
+traces per seed); the non-Poisson scenarios — MMPP bursts, diurnal cycles,
+flash crowds, trace replay — live in :mod:`repro.core.workloads`.
 """
 
 from __future__ import annotations
 
-from typing import List, Sequence
-
-import numpy as np
+from typing import List, Optional, Sequence
 
 from repro.core.request import Request
+from repro.core.workloads import PoissonProcess
 
 
 def poisson_arrivals(
@@ -20,6 +25,7 @@ def poisson_arrivals(
     horizon: float,
     seed: int = 0,
     data_pool: int = 10_000,
+    deadlines: Optional[Sequence[float]] = None,
 ) -> List[Request]:
     """Generate a merged, time-sorted arrival trace.
 
@@ -29,28 +35,13 @@ def poisson_arrivals(
       seed:    PRNG seed (deterministic traces for reproducible experiments).
       data_pool: data ids are drawn uniformly from [0, data_pool) -- the
         paper draws each request i.i.d. from the CIFAR-100 test set.
+      deadlines: optional per-model SLO vector stamped onto each request's
+        ``deadline`` (heterogeneous-SLO serving); None = global SLO.
     Returns: list of Requests sorted by arrival time, req_id in that order.
     """
-    rng = np.random.default_rng(seed)
-    events = []
-    for m, lam in enumerate(rates):
-        if lam <= 0:
-            continue
-        # Expected count + slack, then trim: cheaper than a Python loop.
-        n_expect = int(lam * horizon * 1.25 + 50)
-        gaps = rng.exponential(1.0 / lam, size=n_expect)
-        times = np.cumsum(gaps)
-        while times[-1] < horizon:  # extremely unlikely; extend defensively
-            extra = rng.exponential(1.0 / lam, size=n_expect)
-            times = np.concatenate([times, times[-1] + np.cumsum(extra)])
-        times = times[times < horizon]
-        data = rng.integers(0, data_pool, size=len(times))
-        events.extend(zip(times.tolist(), [m] * len(times), data.tolist()))
-    events.sort()
-    return [
-        Request(req_id=i, model=m, arrival=t, data_id=int(d))
-        for i, (t, m, d) in enumerate(events)
-    ]
+    return PoissonProcess(rates, deadlines=deadlines).generate(
+        horizon, seed=seed, data_pool=data_pool
+    )
 
 
 def paper_rate_vector(lambda_152: float, ratio: Sequence[float] = (3, 2, 1)) -> List[float]:

@@ -36,8 +36,12 @@ DEFAULT_CLIP = 10.0
 # NumPy host path (used inside the per-round scheduler loop)
 # ---------------------------------------------------------------------------
 
-def urgency_np(w: np.ndarray, tau: float, clip: float = DEFAULT_CLIP) -> np.ndarray:
+def urgency_np(w: np.ndarray, tau, clip: float = DEFAULT_CLIP) -> np.ndarray:
     """Eq. 3 on a NumPy array of queueing times (seconds).
+
+    ``tau`` is the global SLO scalar, or an array broadcastable against ``w``
+    of per-task deadlines (heterogeneous-SLO workloads; everything is
+    elementwise so both forms share one code path).
 
     Implemented as exp(min(w/tau - 1, ln C)) == min(exp(w/tau - 1), C) to
     stay overflow-free for arbitrarily late tasks.

@@ -175,6 +175,7 @@ class ServingEngine:
                     dispatch=t_dispatch, finish=t_done,
                     exit_idx=decision.exit_idx,
                     batch_size=decision.batch_size,
+                    deadline=req.deadline,
                 ))
         return self.completions, self.clock() - t0
 

@@ -6,6 +6,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import (
+    Completion,
     ProfileTable,
     Request,
     SchedulerConfig,
@@ -14,6 +15,7 @@ from repro.core import (
     paper_rate_vector,
     poisson_arrivals,
     run_experiment,
+    summarize,
 )
 
 
@@ -162,3 +164,51 @@ class TestEndToEndBehaviour:
         all_tasks = sim.run(arrivals, 3.0, warmup_tasks=0).metrics.num_completed
         post = sim.run(arrivals, 3.0, warmup_tasks=100).metrics.num_completed
         assert post == all_tasks - 100
+
+
+class TestSummarize:
+    @staticmethod
+    def _completions(n, latency=0.1, model=0):
+        return [
+            Completion(req_id=i, model=model, arrival=i * 1.0,
+                       dispatch=i * 1.0, finish=i * 1.0 + latency,
+                       exit_idx=0, batch_size=1)
+            for i in range(n)
+        ]
+
+    def test_warmup_clamped_for_short_runs(self, table):
+        # A 10-completion run with the default 100-task warmup must not
+        # collapse to all-zero metrics: warmup clamps to half the run.
+        m = summarize(self._completions(10), table, slo=0.05, warmup_tasks=100)
+        assert m.num_completed == 5
+        assert m.warmup_used == 5
+        assert m.violation_ratio == 1.0      # latency 0.1 > slo 0.05
+        assert m.p95_latency == pytest.approx(0.1)
+
+    def test_warmup_untouched_for_long_runs(self, table):
+        m = summarize(self._completions(150), table, slo=0.05, warmup_tasks=100)
+        assert m.num_completed == 50
+        assert m.warmup_used == 100
+
+    def test_empty_completions_still_zero(self, table):
+        m = summarize([], table, slo=0.05, warmup_tasks=100,
+                      residual_queue=7, dropped=3)
+        assert m.num_completed == 0 and m.violation_ratio == 0.0
+        # overload accounting survives the empty path in the right fields
+        assert m.residual_queue == 7 and m.dropped == 3
+        assert m.mean_batch == 0.0 and m.per_model == ()
+
+    def test_per_model_breakdown(self, table):
+        # Model 0 fast (never violates), model 2 slow (always violates):
+        # the aggregate hides it, per_model exposes it.
+        cs = self._completions(20, latency=0.01, model=0) + self._completions(
+            20, latency=0.2, model=2
+        )
+        m = summarize(cs, table, slo=0.05, warmup_tasks=0)
+        assert m.violation_ratio == pytest.approx(0.5)
+        by = {pm.model: pm for pm in m.per_model}
+        assert set(by) == {0, 2}
+        assert by[0].violation_ratio == 0.0
+        assert by[2].violation_ratio == 1.0
+        assert by[2].num_completed == 20
+        assert by[2].p95_latency == pytest.approx(0.2)

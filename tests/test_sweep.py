@@ -1,0 +1,72 @@
+"""SweepRunner: grid construction, parallel-vs-serial bitwise identity."""
+
+import pytest
+
+from repro.core import ProfileTable, SweepRunner, SweepSpec
+
+
+@pytest.fixture(scope="module")
+def runner():
+    return SweepRunner(ProfileTable.paper_rtx3080())
+
+
+def small_grid(runner):
+    # Small but non-trivial: 2 policies x 2 scenarios (one bursty) x 2 rates,
+    # short horizon so the whole grid stays cheap.
+    return runner.grid(
+        policies=("edgeserving", "all-final"),
+        scenarios=("poisson", "mmpp"),
+        rates=(100.0, 180.0),
+        seeds=(7,),
+        horizon=1.5,
+        warmup_tasks=20,
+    )
+
+
+class TestGrid:
+    def test_product_order_and_pairing(self, runner):
+        specs = small_grid(runner)
+        assert len(specs) == 8
+        # policy-major nesting: paired (scenario, rate, seed) cells differ
+        # only in policy -> identical arrival traces per comparison.
+        assert specs[0].policy == "edgeserving" and specs[4].policy == "all-final"
+        assert (specs[0].scenario, specs[0].rate) == (specs[4].scenario, specs[4].rate)
+
+    def test_rate_vector_expansion(self):
+        assert SweepSpec(policy="x", rate=100.0).rate_vector() == [300.0, 200.0, 100.0]
+        assert SweepSpec(policy="x", rates=(5.0, 6.0)).rate_vector() == [5.0, 6.0]
+
+    def test_empty_grid(self, runner):
+        assert runner.run([], workers=4) == []
+
+
+class TestDeterminism:
+    def test_serial_rerun_identical(self, runner):
+        specs = small_grid(runner)[:2]
+        a = runner.run(specs, workers=1)
+        b = runner.run(specs, workers=1)
+        assert [r.metrics for r in a] == [r.metrics for r in b]
+
+    def test_parallel_bitwise_identical_to_serial(self, runner):
+        """The acceptance guarantee: workers>1 yields bitwise-identical
+        metrics to workers=1, in grid order (only wall timings differ)."""
+        specs = small_grid(runner)
+        serial = runner.run(specs, workers=1)
+        parallel = runner.run(specs, workers=2)
+        assert [r.spec for r in serial] == specs
+        assert [r.spec for r in parallel] == specs
+        # ServingMetrics is a frozen dataclass of floats/ints/tuples:
+        # == here is exact (bitwise) equality, including per_model rows.
+        assert [r.metrics for r in serial] == [r.metrics for r in parallel]
+
+    def test_het_deadline_cells_parallelise(self, runner):
+        specs = [
+            SweepSpec(policy=p, scenario="poisson", rate=120.0, seed=3,
+                      horizon=1.5, warmup_tasks=20,
+                      deadlines=(0.03, 0.05, 0.07))
+            for p in ("edgeserving", "symphony")
+        ]
+        serial = runner.run(specs, workers=1)
+        parallel = runner.run(specs, workers=2)
+        assert [r.metrics for r in serial] == [r.metrics for r in parallel]
+        assert all(len(r.metrics.per_model) > 0 for r in serial)

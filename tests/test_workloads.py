@@ -1,0 +1,232 @@
+"""Tests for the workload subsystem: arrival-process statistics, trace
+round-trips, heterogeneous per-request deadlines end to end."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DiurnalProcess,
+    FlashCrowdProcess,
+    MMPPProcess,
+    PoissonProcess,
+    ProfileTable,
+    SchedulerConfig,
+    ServingSimulator,
+    TraceReplayProcess,
+    burstiness_index,
+    interarrival_cov,
+    make_scenario,
+    make_scheduler,
+    paper_rate_vector,
+    poisson_arrivals,
+    record_trace,
+    run_experiment,
+)
+from repro.core.workloads import SCENARIOS
+
+RATES = [120.0, 80.0, 40.0]
+
+
+def all_processes():
+    return [
+        PoissonProcess(RATES),
+        MMPPProcess(RATES),
+        DiurnalProcess(RATES),
+        FlashCrowdProcess(RATES),
+        TraceReplayProcess(source=MMPPProcess(RATES)),
+    ]
+
+
+@pytest.fixture(scope="module")
+def table():
+    return ProfileTable.paper_rtx3080()
+
+
+class TestInterface:
+    @pytest.mark.parametrize("proc", all_processes(), ids=lambda p: p.name)
+    def test_sorted_bounded_monotone_ids(self, proc):
+        reqs = proc.generate(10.0, seed=3)
+        times = [r.arrival for r in reqs]
+        assert times == sorted(times)
+        assert all(0 <= t < 10.0 for t in times)
+        assert [r.req_id for r in reqs] == list(range(len(reqs)))
+        assert all(0 <= r.model < 3 for r in reqs)
+
+    @pytest.mark.parametrize("proc", all_processes(), ids=lambda p: p.name)
+    def test_seed_deterministic(self, proc):
+        a = proc.generate(5.0, seed=11)
+        b = proc.generate(5.0, seed=11)
+        c = proc.generate(5.0, seed=12)
+        key = lambda rs: [(r.model, r.arrival, r.data_id) for r in rs]
+        assert key(a) == key(b)
+        assert key(a) != key(c)
+
+    def test_poisson_import_compatible(self):
+        # traffic.poisson_arrivals is the same algorithm: identical traces.
+        a = poisson_arrivals(RATES, 5.0, seed=7)
+        b = PoissonProcess(RATES).generate(5.0, seed=7)
+        assert [(r.model, r.arrival, r.data_id) for r in a] == [
+            (r.model, r.arrival, r.data_id) for r in b
+        ]
+
+    def test_registry_covers_all_scenarios(self):
+        for name in SCENARIOS:
+            proc = make_scenario(name, RATES)
+            assert proc.generate(2.0, seed=1)
+        with pytest.raises(ValueError):
+            make_scenario("nope", RATES)
+
+
+class TestStatistics:
+    """Empirical rate / burstiness checks (long horizons, fixed seeds)."""
+
+    HORIZON = 100.0
+
+    def _count_tolerance(self, proc, seed=5, tol=0.15):
+        reqs = proc.generate(self.HORIZON, seed=seed)
+        for m, lam in enumerate(RATES):
+            expect = proc.mean_rate(m) * self.HORIZON
+            got = sum(1 for r in reqs if r.model == m)
+            assert abs(got - expect) <= tol * expect, (proc.name, m, got, expect)
+        return reqs
+
+    def test_poisson_rate(self):
+        self._count_tolerance(PoissonProcess(RATES), tol=0.05)
+
+    def test_mmpp_rate_preserving(self):
+        # The OFF multiplier is derived so the long-run mean equals RATES.
+        self._count_tolerance(MMPPProcess(RATES), tol=0.15)
+
+    def test_diurnal_rate_preserving(self):
+        # Whole periods average the sinusoid out.
+        self._count_tolerance(DiurnalProcess(RATES, period=10.0), tol=0.10)
+
+    def test_flash_crowd_adds_load(self):
+        # magnitude 5 over 10% of the horizon => mean multiplier 1.4.
+        proc = FlashCrowdProcess(RATES, magnitude=5.0)
+        reqs = proc.generate(self.HORIZON, seed=5)
+        expect = sum(RATES) * self.HORIZON * 1.4
+        assert abs(len(reqs) - expect) <= 0.10 * expect
+
+    def test_burstiness_ordering_mmpp_above_poisson(self):
+        # The defining property: MMPP interarrivals are overdispersed.
+        po = PoissonProcess(RATES).generate(self.HORIZON, seed=5)
+        mm = MMPPProcess(RATES).generate(self.HORIZON, seed=5)
+        cov_po = interarrival_cov(po)
+        cov_mm = interarrival_cov(mm)
+        assert 0.9 < cov_po < 1.1          # Poisson: CoV ~ 1
+        assert cov_mm > cov_po * 1.3       # clear separation
+        assert burstiness_index(mm) > 1.5
+
+    def test_flash_crowd_spike_window(self):
+        proc = FlashCrowdProcess(
+            RATES, spike_start=4.0, spike_duration=1.0, magnitude=8.0,
+            spike_models=(0,),
+        )
+        reqs = proc.generate(10.0, seed=9)
+        in_w = sum(1 for r in reqs if r.model == 0 and 4.0 <= r.arrival < 5.0)
+        out_w = sum(1 for r in reqs if r.model == 0 and r.arrival < 1.0)
+        assert in_w > 4 * max(out_w, 1)    # ~8x rate inside the window
+        # non-spiked models are untouched by the window
+        m2_in = sum(1 for r in reqs if r.model == 2 and 4.0 <= r.arrival < 5.0)
+        assert m2_in < 3 * RATES[2] * 1.0
+
+
+class TestTraceReplay:
+    def test_round_trip_exact(self):
+        src = MMPPProcess(RATES, deadlines=[0.03, 0.05, 0.07])
+        reqs = src.generate(5.0, seed=1)
+        replay = TraceReplayProcess(trace=record_trace(reqs)).generate(
+            5.0, seed=999  # seed must not matter for explicit traces
+        )
+        key = lambda rs: [(r.model, r.arrival, r.data_id, r.deadline) for r in rs]
+        assert key(replay) == key(reqs)
+        assert [r.req_id for r in replay] == list(range(len(replay)))
+
+    def test_source_replay_matches_source(self):
+        src = MMPPProcess(RATES)
+        direct = src.generate(5.0, seed=4)
+        replayed = TraceReplayProcess(source=MMPPProcess(RATES)).generate(
+            5.0, seed=4
+        )
+        assert [(r.model, r.arrival) for r in direct] == [
+            (r.model, r.arrival) for r in replayed
+        ]
+
+    def test_horizon_truncation_and_time_scale(self):
+        src = PoissonProcess(RATES)
+        trace = record_trace(src.generate(10.0, seed=2))
+        half = TraceReplayProcess(trace=trace).generate(5.0)
+        assert all(r.arrival < 5.0 for r in half)
+        compressed = TraceReplayProcess(trace=trace, time_scale=0.5).generate(5.0)
+        assert len(compressed) == len(trace)  # 10 s of traffic in 5 s
+
+
+class TestHeterogeneousDeadlines:
+    def test_deadline_stamping(self):
+        dl = (0.02, 0.05, 0.08)
+        reqs = make_scenario("mmpp", RATES, deadlines=dl).generate(3.0, seed=1)
+        assert reqs and all(r.deadline == dl[r.model] for r in reqs)
+
+    def test_end_to_end_simulator(self, table):
+        """Per-queue SLO vectors flow arrivals -> scheduler -> completions
+        -> violation accounting."""
+        dl = (0.030, 0.050, 0.070)
+        proc = make_scenario("poisson", paper_rate_vector(120), deadlines=dl)
+        sched = make_scheduler("edgeserving", table, SchedulerConfig(slo=0.05))
+        res = run_experiment(
+            sched, table, paper_rate_vector(120), horizon=4.0, seed=4,
+            process=proc,
+        )
+        assert res.completions
+        assert all(c.deadline == dl[c.model] for c in res.completions)
+        # violation accounting uses each request's own deadline
+        expect = np.mean([
+            c.total_latency > c.deadline
+            for c in res.completions[res.metrics.warmup_used:]
+        ])
+        assert res.metrics.violation_ratio == pytest.approx(float(expect))
+
+    def test_tight_deadline_shallows_exit_and_counts_violation(self, table):
+        """Eq. 6 feasibility uses the request's own deadline: a tight one
+        forces a shallower exit, and an impossibly tight one (below even the
+        shallowest exit's latency) is judged by its own deadline."""
+        from repro.core import Request
+
+        sched = make_scheduler("edgeserving", table, SchedulerConfig(slo=0.05))
+        final_lat = table(2, table.num_exits - 1, 1)
+        shallow_lat = table(2, 0, 1)
+        assert final_lat < 0.05  # sanity: final exit meets the global SLO
+
+        # Deadline between exits: scheduler drops to a feasible shallower
+        # exit and meets the request's own deadline (no violation).
+        sim = ServingSimulator(sched, table, num_models=3)
+        tight = [Request(req_id=0, model=2, arrival=0.0, deadline=final_lat / 2)]
+        res = sim.run(tight, horizon=0.1, warmup_tasks=0)
+        c = res.completions[0]
+        assert c.exit_idx < table.num_exits - 1
+        assert res.metrics.violation_ratio == 0.0
+
+        # Deadline below the shallowest exit: unsatisfiable; counted as a
+        # violation against the request's own deadline even though the
+        # global 50 ms SLO would have called it fine.
+        sim2 = ServingSimulator(sched, table, num_models=3)
+        hopeless = [
+            Request(req_id=0, model=2, arrival=0.0, deadline=shallow_lat / 2)
+        ]
+        res2 = sim2.run(hopeless, horizon=0.1, warmup_tasks=0)
+        assert res2.completions[0].total_latency < 0.05
+        assert res2.metrics.violation_ratio == 1.0
+
+    def test_scheduler_prioritises_tight_deadline_queue(self, table):
+        """Two equally-old heads; serving order follows the per-request
+        deadlines, whichever queue holds the tight one."""
+        from repro.core import QueueSnapshot
+
+        w = [np.array([0.02]), np.array([]), np.array([0.02])]
+        sched = make_scheduler("edgeserving", table, SchedulerConfig(slo=0.05))
+
+        d = [np.array([0.025]), np.array([]), np.array([0.075])]
+        assert sched.decide(QueueSnapshot(0.0, w, d)).model == 0
+        d_swapped = [np.array([0.075]), np.array([]), np.array([0.025])]
+        assert sched.decide(QueueSnapshot(0.0, w, d_swapped)).model == 2
