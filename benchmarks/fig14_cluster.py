@@ -1,0 +1,115 @@
+"""Beyond-paper Fig. 14: cluster scaling across dispatch policies.
+
+The paper stops at one shared accelerator; this study shards the same
+workload across a device fleet (``repro.core.cluster``) and compares the
+dispatcher family on three legs:
+
+  * **scaling** — homogeneous RTX 3080 fleets of G = 1, 2, 4, 8 under MMPP
+    bursts with offered load proportional to G (λ₁₅₂ = 140·G): violations
+    fall and exit depth recovers toward final as capacity grows; dispatcher
+    choice barely matters when devices are interchangeable.
+  * **het** — a heterogeneous fleet (2× RTX 3080 + 2× 3.2x-slower
+    Jetson-class) under the same bursty load: queue-blind (round-robin) and
+    speed-blind (JSQ) dispatch collapse, while the stability-aware
+    power-of-d dispatcher — routing each request by its predicted
+    per-device stability-score delta — holds violations near the
+    capacity-weighted optimum.
+  * **failure** — the same heterogeneous fleet losing its first fast device
+    mid-run (``fail_at`` = horizon/2; queued requests fail over through the
+    dispatcher): the acceptance read is stability-aware < round-robin and
+    < JSQ on SLO violation ratio, here and on the het leg.
+
+Each row reports the standard headline metrics plus a per-device breakdown
+(``by_dev``: violation%, utilisation, dead flag) and dispatch counts. The
+grid fans across worker processes via ``SweepRunner`` (parallel ≡ serial
+bitwise); set ``REPRO_FIG14_SMOKE=1`` (CI) for a 2-dispatcher, tiny-horizon
+smoke cell.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List
+
+from repro.core import ProfileTable, ServingMetrics, SweepRunner, SweepSpec
+from benchmarks.common import Row, SEED, derived_str, sweep_rows
+
+LAM_PER_DEVICE = 140.0
+DISPATCHERS = ("round-robin", "jsq", "least-loaded", "stability-aware")
+FLEET_SIZES = (1, 2, 4, 8)
+HORIZON = 6.0
+HET_SIZE = 4           # 2 fast + 2 Jetson-class
+HET_LAM = 160.0 * 4    # ~1.5x the het fleet's weighted capacity: hard leg
+FAIL_LAM = 160.0 * 3   # moderate load so the failure, not the load, dominates
+
+
+def _derived(m: ServingMetrics) -> str:
+    by_dev = "|".join(
+        f"{d.name}:{d.violation_ratio*100:.1f}%/u{d.utilization:.2f}"
+        + ("/dead" if not d.alive else "")
+        for d in m.per_device
+    )
+    return f"{derived_str(m)};by_dev={by_dev}"
+
+
+def _specs() -> List[SweepSpec]:
+    smoke = bool(os.environ.get("REPRO_FIG14_SMOKE"))
+    if smoke:
+        return [
+            SweepSpec(policy="edgeserving", scenario="mmpp", rate=2 * 160.0,
+                      seed=SEED, horizon=1.5, warmup_tasks=20,
+                      fleet="heterogeneous", fleet_size=2, dispatcher=dp,
+                      label=f"fig14/het/x2/{dp}")
+            for dp in ("jsq", "stability-aware")
+        ]
+    specs = [
+        # Leg 1: homogeneous scaling, offered load proportional to G.
+        SweepSpec(policy="edgeserving", scenario="mmpp",
+                  rate=LAM_PER_DEVICE * g, seed=SEED, horizon=HORIZON,
+                  fleet="homogeneous", fleet_size=g, dispatcher=dp,
+                  label=f"fig14/scaling/G{g}/{dp}")
+        for g in FLEET_SIZES
+        for dp in DISPATCHERS
+    ]
+    specs += [
+        # Leg 2: heterogeneous fleet (fast/slow alternating) under bursts.
+        SweepSpec(policy="edgeserving", scenario="mmpp", rate=HET_LAM,
+                  seed=SEED, horizon=HORIZON,
+                  fleet="heterogeneous", fleet_size=HET_SIZE, dispatcher=dp,
+                  label=f"fig14/het/x{HET_SIZE}/{dp}")
+        for dp in DISPATCHERS
+    ]
+    specs += [
+        # Leg 3: same heterogeneous fleet, first fast device dies mid-run.
+        SweepSpec(policy="edgeserving", scenario="poisson", rate=FAIL_LAM,
+                  seed=SEED, horizon=HORIZON,
+                  fleet="heterogeneous", fleet_size=HET_SIZE, dispatcher=dp,
+                  fail_at=((0, HORIZON / 2),),
+                  label=f"fig14/failure/x{HET_SIZE}/{dp}")
+        for dp in DISPATCHERS
+    ]
+    return specs
+
+
+def run() -> List[Row]:
+    table = ProfileTable.paper_rtx3080()
+    results = sweep_rows(SweepRunner(table), _specs())
+    rows = [
+        Row(row.name, row.us_per_call, _derived(metrics))
+        for row, metrics in results
+    ]
+    # Acceptance summary: stability-aware vs the blind dispatchers per leg.
+    viol = {row.name: metrics.violation_ratio for row, metrics in results}
+    for leg in ("het", "failure"):
+        cells = {name.rsplit("/", 1)[1]: v for name, v in viol.items()
+                 if f"/{leg}/" in name}
+        if {"stability-aware", "round-robin", "jsq"} <= set(cells):
+            ok = (cells["stability-aware"] < cells["round-robin"]
+                  and cells["stability-aware"] < cells["jsq"])
+            rows.append(Row(
+                f"fig14/summary/{leg}", 0.0,
+                f"stability_aware={cells['stability-aware']*100:.2f}%;"
+                f"round_robin={cells['round-robin']*100:.2f}%;"
+                f"jsq={cells['jsq']*100:.2f}%;"
+                f"stability_wins={'yes' if ok else 'NO'}"))
+    return rows

@@ -23,6 +23,7 @@ from benchmarks import (
     fig11_ablation,
     fig12_lattice,
     fig13_workloads,
+    fig14_cluster,
     micro_kernels,
     micro_scheduler,
     table1_accuracy,
@@ -41,6 +42,7 @@ MODULES = {
     "fig11": fig11_ablation,
     "fig12": fig12_lattice,
     "fig13": fig13_workloads,
+    "fig14": fig14_cluster,
     "micro_scheduler": micro_scheduler,
     "micro_kernels": micro_kernels,
 }

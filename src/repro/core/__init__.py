@@ -18,7 +18,28 @@ from repro.core.baselines import (
     SymphonyScheduler,
     make_scheduler,
 )
-from repro.core.metrics import ModelMetrics, ServingMetrics, summarize
+from repro.core.cluster import (
+    DISPATCHERS,
+    FLEETS,
+    ClusterResult,
+    ClusterSimulator,
+    DeviceLoadView,
+    DeviceSpec,
+    Dispatcher,
+    JoinShortestQueueDispatcher,
+    LeastLoadedDispatcher,
+    RoundRobinDispatcher,
+    StabilityAwareDispatcher,
+    drain_estimate,
+    make_dispatcher,
+    make_fleet,
+)
+from repro.core.metrics import (
+    DeviceMetrics,
+    ModelMetrics,
+    ServingMetrics,
+    summarize,
+)
 from repro.core.profile import ProfileTable
 from repro.core.queues import QueueSnapshot, ServiceQueue
 from repro.core.request import Completion, Decision, Request, ServingTrace
@@ -62,15 +83,25 @@ __all__ = [
     "AllFinalDeadlineAwareScheduler",
     "AllFinalScheduler",
     "ArrivalProcess",
+    "ClusterResult",
+    "ClusterSimulator",
     "Completion",
     "Decision",
     "DEFAULT_CLIP",
+    "DeviceLoadView",
+    "DeviceMetrics",
+    "DeviceSpec",
+    "Dispatcher",
+    "DISPATCHERS",
     "DiurnalProcess",
     "EarlyExitEDFScheduler",
     "EarlyExitLQFScheduler",
     "EdgeServingScheduler",
+    "FLEETS",
     "FlashCrowdProcess",
+    "JoinShortestQueueDispatcher",
     "LatticeEdgeServingScheduler",
+    "LeastLoadedDispatcher",
     "MMPPProcess",
     "ModelMetrics",
     "NoBatchingScheduler",
@@ -78,6 +109,7 @@ __all__ = [
     "ProfileTable",
     "QueueSnapshot",
     "Request",
+    "RoundRobinDispatcher",
     "Scheduler",
     "SchedulerConfig",
     "ServiceQueue",
@@ -85,6 +117,7 @@ __all__ = [
     "ServingSimulator",
     "ServingTrace",
     "SimResult",
+    "StabilityAwareDispatcher",
     "SweepResult",
     "SweepRunner",
     "SweepSpec",
@@ -93,8 +126,11 @@ __all__ = [
     "VectorizedEdgeServingScheduler",
     "burstiness_index",
     "candidate_stability_scores",
+    "drain_estimate",
     "interarrival_cov",
     "lattice_stability_scores",
+    "make_dispatcher",
+    "make_fleet",
     "make_scenario",
     "make_scheduler",
     "paper_rate_vector",

@@ -31,6 +31,31 @@ class ModelMetrics:
 
 
 @dataclasses.dataclass(frozen=True)
+class DeviceMetrics:
+    """Per-device breakdown of a cluster serving window.
+
+    One entry per device in ``ServingMetrics.per_device`` (cluster runs
+    only; empty for single-accelerator experiments). ``dispatched`` counts
+    requests routed to the device (including failover re-dispatches), so
+    ``dispatched - num_completed`` exposes skew between what a dispatcher
+    assigned and what the device actually finished post-warmup.
+    ``violation_ratio`` counts the device's shed requests as violations,
+    the same ``(late + dropped) / (done + dropped)`` rule as the aggregate.
+    """
+
+    device: int
+    name: str
+    num_completed: int
+    dispatched: int
+    dropped: int
+    violation_ratio: float
+    p95_latency: float
+    mean_exit_depth: float
+    utilization: float
+    alive: bool
+
+
+@dataclasses.dataclass(frozen=True)
 class ServingMetrics:
     """Aggregate results over a serving window (post-warmup completions)."""
 
@@ -50,6 +75,7 @@ class ServingMetrics:
     dropped: int = 0                # shed requests (Symphony); count as violations
     warmup_used: int = 0            # completions actually excluded (post-clamp)
     per_model: "tuple[ModelMetrics, ...]" = ()
+    per_device: "tuple[DeviceMetrics, ...]" = ()  # cluster runs only
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -90,8 +116,13 @@ def summarize(
         warmup_tasks = len(completions) // 2
     done = completions[warmup_tasks:]
     if not done:
+        # (late + dropped) / (done + dropped) with done empty: every
+        # accounted request was shed, and a dropped request certainly
+        # missed its deadline.
         return ServingMetrics(
-            num_completed=0, violation_ratio=0.0, p50_latency=0.0,
+            num_completed=0,
+            violation_ratio=1.0 if dropped else 0.0,
+            p50_latency=0.0,
             p95_latency=0.0, p99_latency=0.0, mean_latency=0.0,
             mean_queueing=0.0, mean_exit_depth=0.0, mean_accuracy=0.0,
             throughput=0.0, utilization=0.0, mean_batch=0.0,

@@ -38,6 +38,14 @@ class SimResult:
     span: float
 
 
+def service_noise_multiplier(rng: np.random.Generator, cov: float) -> float:
+    """Mean-1 lognormal service-time multiplier at coefficient of variation
+    ``cov`` (paper: CoV < 3%). Shared by the single-device and cluster
+    simulators so their noise streams stay formula-identical."""
+    sigma = np.sqrt(np.log1p(cov**2))
+    return float(rng.lognormal(-0.5 * sigma**2, sigma))
+
+
 class ServingSimulator:
     """Deterministic discrete-event simulator for one serving experiment."""
 
@@ -74,8 +82,7 @@ class ServingSimulator:
     def _service_time(self, m: int, e: int, batch: int) -> float:
         base = self.table(self._exec_row(m), e, batch)
         if self.noise_cov > 0:
-            sigma = np.sqrt(np.log1p(self.noise_cov**2))
-            base *= float(self.rng.lognormal(-0.5 * sigma**2, sigma))
+            base *= service_noise_multiplier(self.rng, self.noise_cov)
         return base
 
     def run(

@@ -38,6 +38,7 @@ import time
 from typing import List, Optional, Sequence, Tuple
 
 from repro.core.baselines import make_scheduler
+from repro.core.cluster import ClusterSimulator, make_dispatcher, make_fleet
 from repro.core.metrics import ServingMetrics
 from repro.core.profile import ProfileTable
 from repro.core.scheduler import SchedulerConfig
@@ -57,6 +58,14 @@ class SweepSpec:
     override. ``scenario`` names a ``repro.core.workloads.SCENARIOS`` entry;
     ``scenario_kwargs`` (a tuple of (key, value) pairs, to stay hashable)
     parameterises it. ``deadlines`` is an optional per-model SLO vector.
+
+    Cluster cells: setting ``fleet`` (a ``repro.core.cluster.FLEETS`` name)
+    switches the cell from the single-device simulator to a
+    :class:`ClusterSimulator` of ``fleet_size`` devices built from the
+    runner's table, routed by ``dispatcher``; ``fail_at`` is an optional
+    ``((device, time), ...)`` failure schedule. All fields stay hashable /
+    picklable, so cluster grids fan across workers with the same
+    parallel ≡ serial bitwise guarantee.
     """
 
     policy: str
@@ -71,6 +80,10 @@ class SweepSpec:
     deadlines: Optional[Tuple[float, ...]] = None
     scenario_kwargs: Tuple[Tuple[str, object], ...] = ()
     label: str = ""
+    fleet: Optional[str] = None          # None = single-device cell
+    fleet_size: int = 1
+    dispatcher: str = "least-loaded"
+    fail_at: Tuple[Tuple[int, float], ...] = ()
 
     def rate_vector(self) -> List[float]:
         if self.rates is not None:
@@ -78,9 +91,12 @@ class SweepSpec:
         return paper_rate_vector(self.rate)
 
     def title(self) -> str:
-        return self.label or (
-            f"{self.policy}/{self.scenario}/lam{self.rate:g}/seed{self.seed}"
-        )
+        if self.label:
+            return self.label
+        base = f"{self.policy}/{self.scenario}/lam{self.rate:g}/seed{self.seed}"
+        if self.fleet is not None:
+            base = f"{self.dispatcher}/{self.fleet}x{self.fleet_size}/{base}"
+        return base
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +155,28 @@ class SweepRunner:
             for p, sc, r, s in itertools.product(policies, scenarios, rates, seeds)
         ]
 
+    def cluster_grid(
+        self,
+        dispatchers: Sequence[str],
+        fleets: Sequence[Tuple[str, int]],
+        scenarios: Sequence[str] = ("poisson",),
+        rates: Sequence[float] = (100.0,),
+        seeds: Sequence[int] = (7,),
+        policy: str = "edgeserving",
+        **common,
+    ) -> List[SweepSpec]:
+        """The (dispatcher × fleet × scenario × rate × seed) cluster product,
+        dispatcher-major; ``fleets`` are ``(FLEETS name, size)`` pairs.
+        Dispatchers sharing a (fleet, scenario, rate, seed) cell see
+        identical arrival traces — paired comparisons by construction.
+        """
+        return [
+            SweepSpec(policy=policy, dispatcher=dp, fleet=fl, fleet_size=fs,
+                      scenario=sc, rate=r, seed=s, **common)
+            for dp, (fl, fs), sc, r, s in itertools.product(
+                dispatchers, fleets, scenarios, rates, seeds)
+        ]
+
     # -- execution -----------------------------------------------------------
 
     def run_cell(self, spec: SweepSpec) -> SweepResult:
@@ -146,7 +184,6 @@ class SweepRunner:
         t0 = time.perf_counter()
         rates = spec.rate_vector()
         cfg = SchedulerConfig(slo=spec.slo, max_batch=spec.max_batch)
-        sched = make_scheduler(spec.policy, self.sched_table or self.table, cfg)
         process = make_scenario(
             spec.scenario, rates, deadlines=spec.deadlines,
             **dict(spec.scenario_kwargs),
@@ -154,15 +191,47 @@ class SweepRunner:
         arrivals = process.generate(
             spec.horizon, seed=spec.seed, data_pool=self.data_pool
         )
-        sim = ServingSimulator(
-            sched,
-            self.table,
-            num_models=len(rates),
-            service_noise_cov=self.service_noise_cov,
-            model_map=self.model_map,
-            seed=spec.seed,
-        )
-        res = sim.run(arrivals, spec.horizon, warmup_tasks=spec.warmup_tasks)
+        if spec.fleet is not None:
+            if self.sched_table is not None or self.model_map is not None:
+                raise NotImplementedError(
+                    "cluster cells build per-device schedulers from the "
+                    "fleet's own tables; a runner-level sched_table / "
+                    "model_map would be silently ignored — use a "
+                    "fleet-less spec or encode the view in the fleet's "
+                    "DeviceSpecs via ClusterSimulator directly"
+                )
+            sim = ClusterSimulator(
+                make_fleet(spec.fleet, spec.fleet_size, self.table,
+                           fail_at=spec.fail_at),
+                policy=spec.policy,
+                config=cfg,
+                dispatcher=make_dispatcher(spec.dispatcher, slo=spec.slo),
+                num_models=len(rates),
+                service_noise_cov=self.service_noise_cov,
+                seed=spec.seed,
+            )
+            res = sim.run(arrivals, spec.horizon,
+                          warmup_tasks=spec.warmup_tasks)
+        else:
+            if (spec.fail_at or spec.fleet_size != 1
+                    or spec.dispatcher != "least-loaded"):
+                raise ValueError(
+                    "cluster-only SweepSpec fields (fail_at / fleet_size / "
+                    "dispatcher) require fleet=<FLEETS name>; a single-device "
+                    "cell would silently ignore them"
+                )
+            sched = make_scheduler(
+                spec.policy, self.sched_table or self.table, cfg)
+            single = ServingSimulator(
+                sched,
+                self.table,
+                num_models=len(rates),
+                service_noise_cov=self.service_noise_cov,
+                model_map=self.model_map,
+                seed=spec.seed,
+            )
+            res = single.run(arrivals, spec.horizon,
+                             warmup_tasks=spec.warmup_tasks)
         us = (time.perf_counter() - t0) * 1e6
         return SweepResult(spec, res.metrics, us)
 

@@ -1,0 +1,484 @@
+"""Cluster serving subsystem: dispatchers, fleets, placement, determinism.
+
+The two load-bearing guarantees (ISSUE acceptance criteria):
+  * a G=1 cluster reproduces the single-device simulator bitwise on the
+    same trace;
+  * cluster sweep cells are parallel ≡ serial bitwise through SweepRunner.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterSimulator,
+    DeviceSpec,
+    ProfileTable,
+    SchedulerConfig,
+    ServingSimulator,
+    SweepRunner,
+    drain_estimate,
+    make_dispatcher,
+    make_fleet,
+    make_scheduler,
+    paper_rate_vector,
+)
+from repro.core.cluster import (
+    DISPATCHERS,
+    DeviceLoadView,
+    JoinShortestQueueDispatcher,
+    LeastLoadedDispatcher,
+    RoundRobinDispatcher,
+    StabilityAwareDispatcher,
+)
+from repro.core.workloads import make_scenario
+
+
+@pytest.fixture(scope="module")
+def table():
+    return ProfileTable.paper_rtx3080()
+
+
+def trace(lam, horizon=3.0, seed=7, scenario="poisson"):
+    return make_scenario(scenario, paper_rate_vector(lam)).generate(
+        horizon, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher policies against a synthetic view
+# ---------------------------------------------------------------------------
+
+
+class _FakeView(DeviceLoadView):
+    """Scripted fleet state so dispatcher selection logic tests in isolation."""
+
+    def __init__(self, backlogs, queued=None, service=None):
+        self.backlogs = list(backlogs)
+        self.queued = list(queued or [0] * len(self.backlogs))
+        self.service = list(service or [0.0] * len(self.backlogs))
+
+    def healthy(self, d):
+        return True
+
+    def effective_backlog(self, d):
+        return self.backlogs[d]
+
+    def total_queued(self, d):
+        return self.queued[d]
+
+    def predicted_completion(self, d, model):
+        return self.backlogs[d] + self.service[d]
+
+
+class TestDispatchers:
+    def test_registry_and_factory(self):
+        assert set(DISPATCHERS) == {
+            "round-robin", "jsq", "least-loaded", "stability-aware"}
+        for name in DISPATCHERS:
+            assert make_dispatcher(name).name == name
+        with pytest.raises(ValueError):
+            make_dispatcher("nope")
+
+    def test_round_robin_cycles_eligible(self):
+        rr = RoundRobinDispatcher()
+        view = _FakeView([0, 0, 0])
+        picks = [rr.pick(0, [0, 2], view) for _ in range(4)]
+        assert picks == [0, 2, 0, 2]
+        rr.reset()
+        assert rr.pick(0, [0, 2], view) == 0
+
+    def test_jsq_min_queue_tie_lowest_id(self):
+        jsq = JoinShortestQueueDispatcher()
+        view = _FakeView([9, 0, 0], queued=[3, 5, 3])
+        assert jsq.pick(0, [0, 1, 2], view) == 0  # tie 0 vs 2 -> lowest id
+        view.queued = [3, 1, 3]
+        assert jsq.pick(0, [0, 1, 2], view) == 1
+
+    def test_least_loaded_uses_effective_backlog(self):
+        ll = LeastLoadedDispatcher()
+        view = _FakeView([0.5, 0.1, 0.3])
+        assert ll.pick(0, [0, 1, 2], view) == 1
+
+    def test_stability_aware_prices_device_speed(self):
+        # Same backlog, but device 1 is 3x slower at serving the request
+        # itself: JSQ/least-loaded can't see it, stability-aware can.
+        sa = StabilityAwareDispatcher(slo=0.050, power_d=2)
+        sa.reset(0)
+        view = _FakeView([0.01, 0.01], service=[0.005, 0.015])
+        assert sa.pick(0, [0, 1], view) == 0
+
+    def test_stability_aware_ranks_hopeless_devices_by_completion(self):
+        # Both saturate the urgency clip, but the argmin-on-T_hat shortcut
+        # still prefers the sooner completion (delta ties are T_hat ties).
+        sa = StabilityAwareDispatcher(slo=0.050, power_d=2)
+        sa.reset(0)
+        view = _FakeView([10.0, 5.0], service=[0.01, 0.01])
+        assert sa.pick(0, [0, 1], view) == 1
+        assert sa.delta(10.01) == sa.delta(5.01) == 10.0  # both clipped
+
+    def test_stability_aware_accepts_request_deadline(self):
+        # Het-SLO workloads pass the request's own tau so the priced delta
+        # is in the right currency (the pick itself is tau-invariant for a
+        # shared tau, since the urgency is monotone in predicted completion).
+        sa = StabilityAwareDispatcher(slo=0.050, power_d=2)
+        sa.reset(0)
+        view = _FakeView([0.01, 0.01], service=[0.005, 0.015])
+        assert sa.pick(0, [0, 1], view, deadline=0.005) == 0
+        assert sa.pick(0, [0, 1], view, deadline=0.500) == 0
+
+    def test_stability_aware_sampling_deterministic_per_seed(self):
+        view = _FakeView([0.1, 0.2, 0.3, 0.4], service=[0.01] * 4)
+        a = StabilityAwareDispatcher(power_d=2)
+        b = StabilityAwareDispatcher(power_d=2)
+        a.reset(42)
+        b.reset(42)
+        picks_a = [a.pick(0, [0, 1, 2, 3], view) for _ in range(32)]
+        picks_b = [b.pick(0, [0, 1, 2, 3], view) for _ in range(32)]
+        assert picks_a == picks_b
+
+
+# ---------------------------------------------------------------------------
+# Drain estimate (closed form)
+# ---------------------------------------------------------------------------
+
+
+class TestDrainEstimate:
+    def test_matches_explicit_serve_loop(self, table):
+        sched = make_scheduler("edgeserving", table, SchedulerConfig())
+        qlens = [25, 0, 7]
+        est = drain_estimate(sched, qlens)
+        # the pre-refactor O(queue-length) while-loop, verbatim
+        e = table.num_exits - 1
+        total = 0.0
+        for m, n in enumerate(qlens):
+            while n > 0:
+                b = sched.batch_size(n)
+                total += table(m, e, b)
+                n -= b
+        assert est == total  # closed form is exact, not approximate
+
+    def test_respects_policy_batch_cap(self, table):
+        bs1 = make_scheduler("ours-bs1", table, SchedulerConfig())
+        full = make_scheduler("edgeserving", table, SchedulerConfig())
+        assert drain_estimate(bs1, [10, 0, 0]) == pytest.approx(
+            10 * table(0, 3, 1))
+        assert drain_estimate(bs1, [10, 0, 0]) > drain_estimate(full, [10, 0, 0])
+
+    def test_non_min_form_ladder_falls_back_to_exact_loop(self, table):
+        # A scheduler whose batch rule is NOT B* = min(|Q|, B_max) — e.g. a
+        # geometric power-of-two ladder — must get the exact serve-out, not
+        # the quotient+remainder closed form.
+        from repro.core import EdgeServingScheduler
+
+        class PowerOfTwoBatch(EdgeServingScheduler):
+            def batch_size(self, qlen):
+                b = 1
+                while b * 2 <= min(qlen, self.config.max_batch):
+                    b *= 2
+                return b
+
+        sched = PowerOfTwoBatch(table, SchedulerConfig(max_batch=16))
+        e = table.num_exits - 1
+        for qlens in ([25, 0, 0], [9, 3, 1], [31, 17, 2]):
+            expect = 0.0
+            for m, n in enumerate(qlens):
+                while n > 0:
+                    b = sched.batch_size(n)
+                    expect += table(m, e, b)
+                    n -= b
+            assert drain_estimate(sched, qlens) == pytest.approx(expect)
+
+
+# ---------------------------------------------------------------------------
+# Fleets and placement
+# ---------------------------------------------------------------------------
+
+
+class TestFleets:
+    def test_homogeneous_fleet(self, table):
+        fleet = make_fleet("homogeneous", 3, table)
+        assert len(fleet) == 3
+        assert all(s.table is table for s in fleet)
+
+    def test_heterogeneous_fleet_alternates_speed(self, table):
+        fleet = make_fleet("heterogeneous", 4, table)
+        assert np.allclose(fleet[1].table.latency, table.latency * 3.2)
+        assert np.allclose(fleet[3].table.latency, table.latency * 3.2)
+        assert fleet[0].table is table and fleet[2].table is table
+
+    def test_fail_at_schedule(self, table):
+        fleet = make_fleet("homogeneous", 2, table, fail_at=((1, 2.5),))
+        assert fleet[0].fail_at is None and fleet[1].fail_at == 2.5
+
+    def test_unknown_fleet_raises(self, table):
+        with pytest.raises(ValueError):
+            make_fleet("nope", 2, table)
+
+    def test_placement_map(self, table):
+        devices = [
+            DeviceSpec(table, models=(0, 1)),
+            DeviceSpec(table, models=(2,)),
+        ]
+        sim = ClusterSimulator(devices, num_models=3)
+        assert sim.placement == [[0], [0], [1]]
+
+    def test_unplaced_model_rejected(self, table):
+        with pytest.raises(AssertionError):
+            ClusterSimulator([DeviceSpec(table, models=(0,))], num_models=2)
+
+    def test_placement_respected_end_to_end(self, table):
+        devices = [
+            DeviceSpec(table, models=(0,)),
+            DeviceSpec(table, models=(1, 2)),
+        ]
+        arrivals = trace(100.0)
+        sim = ClusterSimulator(devices, num_models=3, seed=7)
+        res = sim.run(list(arrivals), 3.0, warmup_tasks=20)
+        # with one host per model, dispatch counts are fully determined
+        n_model0 = sum(1 for r in arrivals if r.model == 0)
+        assert res.dispatch_counts == (n_model0, len(arrivals) - n_model0)
+        assert res.metrics.residual_queue == 0
+
+
+# ---------------------------------------------------------------------------
+# G=1 cluster ≡ single-device simulator (bitwise)
+# ---------------------------------------------------------------------------
+
+
+class TestSingleDeviceEquivalence:
+    @pytest.mark.parametrize("policy", ["edgeserving", "edgeserving-lattice",
+                                        "all-final", "symphony"])
+    def test_g1_bitwise_identical(self, table, policy):
+        cfg = SchedulerConfig(slo=0.050)
+        arrivals = trace(160.0, scenario="mmpp")
+        single = ServingSimulator(
+            make_scheduler(policy, table, cfg), table, num_models=3, seed=7)
+        ref = single.run(list(arrivals), 3.0, warmup_tasks=50)
+        sim = ClusterSimulator(
+            make_fleet("homogeneous", 1, table), policy=policy, config=cfg,
+            num_models=3, seed=7)
+        got = sim.run(list(arrivals), 3.0, warmup_tasks=50)
+        assert got.completions == ref.completions
+        assert got.span == ref.span
+        # metrics equal apart from the cluster-only per_device rollup
+        assert dataclasses.replace(got.metrics, per_device=()) == ref.metrics
+        assert len(got.metrics.per_device) == 1
+
+    def test_g1_bitwise_identical_with_service_noise(self, table):
+        # device 0's noise stream must equal the single-device stream
+        cfg = SchedulerConfig(slo=0.050)
+        arrivals = trace(160.0)
+        single = ServingSimulator(
+            make_scheduler("edgeserving", table, cfg), table, num_models=3,
+            seed=11, service_noise_cov=0.03)
+        ref = single.run(list(arrivals), 3.0, warmup_tasks=50)
+        sim = ClusterSimulator(
+            make_fleet("homogeneous", 1, table), config=cfg, num_models=3,
+            seed=11, service_noise_cov=0.03)
+        got = sim.run(list(arrivals), 3.0, warmup_tasks=50)
+        assert got.completions == ref.completions
+        assert dataclasses.replace(got.metrics, per_device=()) == ref.metrics
+
+    def test_g1_rerun_stable(self, table):
+        sim = ClusterSimulator(make_fleet("homogeneous", 1, table),
+                               num_models=3, seed=7)
+        arrivals = trace(120.0)
+        a = sim.run(list(arrivals), 3.0)
+        b = sim.run(list(arrivals), 3.0)
+        assert a.metrics == b.metrics
+
+
+# ---------------------------------------------------------------------------
+# Multi-device behaviour
+# ---------------------------------------------------------------------------
+
+
+class TestCluster:
+    def test_scaling_restores_depth_and_compliance(self, table):
+        # EdgeServing absorbs overload by exiting shallow, so the scaling
+        # win shows up as *both* fewer violations and deeper exits (higher
+        # accuracy), not violations alone.
+        arrivals = trace(160.0 * 3, horizon=3.0)
+        ms = []
+        for g in (1, 2, 4):
+            sim = ClusterSimulator(
+                make_fleet("homogeneous", g, table),
+                dispatcher=make_dispatcher("least-loaded"),
+                num_models=3, seed=7)
+            ms.append(sim.run(list(arrivals), 3.0).metrics)
+        assert ms[2].violation_ratio <= ms[1].violation_ratio <= ms[0].violation_ratio
+        assert ms[0].mean_exit_depth < ms[1].mean_exit_depth < ms[2].mean_exit_depth
+        assert ms[2].mean_exit_depth > 3.5  # near-final exits once scaled out
+
+    def test_heterogeneous_fleet_stability_beats_blind_dispatch(self, table):
+        arrivals = trace(160.0 * 4, horizon=3.0, scenario="mmpp")
+        viol = {}
+        for dp in ("round-robin", "jsq", "stability-aware"):
+            sim = ClusterSimulator(
+                make_fleet("heterogeneous", 4, table),
+                dispatcher=make_dispatcher(dp, slo=0.050),
+                num_models=3, seed=7)
+            viol[dp] = sim.run(list(arrivals), 3.0).metrics.violation_ratio
+        assert viol["stability-aware"] < viol["round-robin"]
+        assert viol["stability-aware"] < viol["jsq"]
+
+    def test_device_failure_reroutes_and_completes(self, table):
+        arrivals = trace(160.0 * 2, horizon=4.0)
+        sim = ClusterSimulator(
+            make_fleet("homogeneous", 2, table, fail_at=((0, 2.0),)),
+            dispatcher=make_dispatcher("least-loaded"),
+            num_models=3, seed=7)
+        res = sim.run(list(arrivals), 4.0)
+        dead, alive = res.metrics.per_device
+        assert not dead.alive and alive.alive
+        # failover: nothing stranded, everything eventually completes
+        assert res.metrics.residual_queue == 0
+        assert len(res.completions) == len(arrivals)
+        # the dead device stopped half-way: the survivor did more work
+        assert dead.utilization < alive.utilization
+
+    def test_late_failure_does_not_inflate_span(self, table):
+        # a fail_at long after the workload drains is an idle death: it
+        # must not stretch span (and so deflate throughput/utilization).
+        arrivals = trace(100.0, horizon=2.0)
+        base = ClusterSimulator(make_fleet("homogeneous", 2, table),
+                                num_models=3, seed=7)
+        ref = base.run(list(arrivals), 2.0)
+        late = ClusterSimulator(
+            make_fleet("homogeneous", 2, table, fail_at=((0, 500.0),)),
+            num_models=3, seed=7)
+        got = late.run(list(arrivals), 2.0)
+        assert got.span == ref.span
+        assert got.metrics.throughput == ref.metrics.throughput
+
+    def test_all_hosts_dead_requests_strand(self, table):
+        devices = [
+            DeviceSpec(table, models=(0,), fail_at=0.5),
+            DeviceSpec(table, models=(1, 2)),
+        ]
+        sim = ClusterSimulator(devices, num_models=3, seed=7)
+        res = sim.run(trace(100.0, horizon=3.0), 3.0)
+        assert res.metrics.residual_queue > 0  # model-0 arrivals after 0.5 s
+
+    def test_het_slo_deadlines_flow_through_dispatch(self, table):
+        from repro.core import SweepRunner, SweepSpec
+        runner = SweepRunner(table)
+        res = runner.run_cell(SweepSpec(
+            policy="edgeserving", fleet="heterogeneous", fleet_size=2,
+            dispatcher="stability-aware", rate=200.0, seed=7, horizon=1.5,
+            warmup_tasks=20, deadlines=(0.030, 0.050, 0.070)))
+        assert res.metrics.num_completed > 0
+        assert len(res.metrics.per_model) == 3  # judged by their own taus
+
+    def test_per_device_drops_counted_as_violations(self, table):
+        # Symphony sheds under overload; a device's shed requests must show
+        # up in its own violation ratio (same rule as the aggregate).
+        arrivals = trace(500.0, horizon=3.0)
+        sim = ClusterSimulator(
+            make_fleet("heterogeneous", 2, table), policy="symphony",
+            dispatcher=make_dispatcher("round-robin"), num_models=3, seed=7)
+        res = sim.run(list(arrivals), 3.0)
+        assert res.metrics.dropped > 0
+        assert res.metrics.dropped == sum(
+            d.dropped for d in res.metrics.per_device)
+        for d in res.metrics.per_device:
+            if d.dropped:
+                assert d.violation_ratio > 0.0
+
+    def test_drops_without_completions_are_full_violations(self, table):
+        from repro.core import summarize
+        m = summarize([], table, 0.05, warmup_tasks=0, dropped=17)
+        assert m.violation_ratio == 1.0 and m.dropped == 17
+        assert summarize([], table, 0.05, warmup_tasks=0).violation_ratio == 0.0
+
+    def test_per_device_rollup_consistent(self, table):
+        sim = ClusterSimulator(
+            make_fleet("heterogeneous", 2, table),
+            dispatcher=make_dispatcher("stability-aware"),
+            num_models=3, seed=7)
+        res = sim.run(trace(200.0), 3.0, warmup_tasks=40)
+        pd = res.metrics.per_device
+        assert len(pd) == 2
+        assert sum(d.num_completed for d in pd) == res.metrics.num_completed
+        assert sum(d.dispatched for d in pd) == len(res.completions)
+        assert all(0.0 <= d.utilization <= 1.0 for d in pd)
+        # aggregate utilization is the fleet mean, in [0, 1]
+        assert 0.0 < res.metrics.utilization <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Sweep integration: cluster cells, parallel ≡ serial
+# ---------------------------------------------------------------------------
+
+
+class TestClusterSweep:
+    def test_cluster_grid_shape(self, table):
+        runner = SweepRunner(table)
+        specs = runner.cluster_grid(
+            dispatchers=("round-robin", "jsq"),
+            fleets=(("homogeneous", 2), ("heterogeneous", 4)),
+            rates=(200.0,),
+            horizon=1.5,
+        )
+        assert len(specs) == 4
+        assert specs[0].dispatcher == "round-robin"
+        assert specs[1].fleet_size == 4
+        assert "homogeneousx2" in specs[0].title()
+
+    def test_parallel_bitwise_identical_to_serial(self, table):
+        runner = SweepRunner(table)
+        specs = runner.cluster_grid(
+            dispatchers=("least-loaded", "stability-aware"),
+            fleets=(("heterogeneous", 2),),
+            scenarios=("mmpp",),
+            rates=(250.0,),
+            horizon=1.5,
+            warmup_tasks=20,
+        ) + runner.cluster_grid(
+            dispatchers=("jsq",),
+            fleets=(("homogeneous", 2),),
+            rates=(200.0,),
+            horizon=1.5,
+            warmup_tasks=20,
+            fail_at=((0, 0.8),),
+        )
+        serial = runner.run(specs, workers=1)
+        parallel = runner.run(specs, workers=2)
+        assert [r.spec for r in parallel] == specs
+        # frozen dataclasses of floats/ints/tuples: == is bitwise equality,
+        # including the per_device rollups.
+        assert [r.metrics for r in serial] == [r.metrics for r in parallel]
+        assert all(len(r.metrics.per_device) == 2 for r in serial)
+
+    def test_cluster_cell_rejects_runner_sched_table(self, table):
+        # sched_table / model_map apply to single-device cells only; a
+        # cluster cell must fail loudly instead of silently ignoring them.
+        from repro.core import SweepSpec
+        runner = SweepRunner(table, sched_table=table.restrict_exits([3]))
+        spec = SweepSpec(policy="edgeserving", fleet="homogeneous",
+                         fleet_size=2, horizon=1.0)
+        with pytest.raises(NotImplementedError):
+            runner.run_cell(spec)
+
+    def test_single_device_cell_rejects_cluster_only_fields(self, table):
+        # the symmetric guard: cluster knobs without fleet= must fail
+        # loudly, not silently run a fleetless experiment.
+        from repro.core import SweepSpec
+        runner = SweepRunner(table)
+        for kw in ({"fail_at": ((0, 3.0),)}, {"dispatcher": "jsq"},
+                   {"fleet_size": 2}):
+            with pytest.raises(ValueError):
+                runner.run_cell(SweepSpec(policy="edgeserving", horizon=1.0,
+                                          **kw))
+
+    def test_g1_cluster_cell_matches_single_device_cell(self, table):
+        runner = SweepRunner(table)
+        base = dict(scenario="mmpp", rate=160.0, seed=7, horizon=1.5,
+                    warmup_tasks=20)
+        from repro.core import SweepSpec
+        single = runner.run_cell(SweepSpec(policy="edgeserving", **base))
+        cluster = runner.run_cell(SweepSpec(
+            policy="edgeserving", fleet="homogeneous", fleet_size=1, **base))
+        assert dataclasses.replace(
+            cluster.metrics, per_device=()) == single.metrics

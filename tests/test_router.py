@@ -5,7 +5,13 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import ProfileTable
+from repro.core import ProfileTable, SchedulerConfig, make_scheduler
+from repro.core.cluster import (
+    JoinShortestQueueDispatcher,
+    LeastLoadedDispatcher,
+    RoundRobinDispatcher,
+    StabilityAwareDispatcher,
+)
 from repro.runtime.fault_tolerance import StragglerPolicy
 from repro.runtime.router import ReplicaRouter
 
@@ -78,6 +84,90 @@ class TestRouting:
                 assert r.route() != bad
 
 
+class TestSharedDispatchers:
+    """The router routes through the repro.core.cluster dispatcher family;
+    these tests drive each policy through the router's DeviceLoadView."""
+
+    def test_default_dispatcher_is_least_loaded(self):
+        r = ReplicaRouter(2)
+        assert isinstance(r.dispatcher, LeastLoadedDispatcher)
+
+    def test_round_robin_cycles_healthy(self):
+        r = ReplicaRouter(3, dispatcher=RoundRobinDispatcher())
+        assert [r.route() for _ in range(4)] == [0, 1, 2, 0]
+
+    def test_round_robin_skips_unhealthy(self):
+        r = ReplicaRouter(3, straggler=StragglerPolicy(3, alpha=1.0),
+                          dispatcher=RoundRobinDispatcher())
+        r.observe_quantum(1, observed_s=1.0, expected_s=0.1)  # detach 1
+        assert set(r.route() for _ in range(6)) == {0, 2}
+
+    def test_jsq_uses_reported_queue_lengths(self):
+        r = ReplicaRouter(3, dispatcher=JoinShortestQueueDispatcher())
+        r.update_backlog(0, 0.0, qlens=[5, 5])   # short drain, long queue
+        r.update_backlog(1, 9.0, qlens=[1, 0])
+        r.update_backlog(2, 9.0, qlens=[2, 2])
+        assert r.route() == 1
+
+    def test_jsq_route_batch_spreads_burst(self):
+        # the greedy in-flight estimate (pending) must be visible to JSQ,
+        # or a burst between replica reports dogpiles one replica.
+        r = ReplicaRouter(2, dispatcher=JoinShortestQueueDispatcher())
+        r.update_backlog(0, 0.0, qlens=[1])
+        r.update_backlog(1, 0.0, qlens=[2])
+        picks = np.bincount(r.route_batch(10), minlength=2)
+        assert picks.min() >= 4
+        # a fresh report supersedes the in-flight estimate
+        r.update_backlog(0, 0.0, qlens=[0])
+        assert r.total_queued(0) == 0
+
+    def test_keyed_requests_do_not_consume_dispatcher_state(self):
+        r = ReplicaRouter(2, dispatcher=RoundRobinDispatcher())
+        # keyed lookups stick to their rendezvous home without advancing
+        # the round-robin counter...
+        unkeyed = [r.route(), r.route(key="s"), r.route(key="s"), r.route()]
+        # ...so unkeyed traffic still alternates 0, 1, 0, 1, ...
+        assert (unkeyed[0], unkeyed[3]) == (0, 1)
+
+    def test_backlog_only_report_invalidates_stale_qlens(self):
+        # a fresh backlog-only report must not leave JSQ reading an old
+        # queue-length snapshot next to a new backlog.
+        r = ReplicaRouter(2, dispatcher=JoinShortestQueueDispatcher())
+        r.update_backlog(0, 0.5, qlens=[10])
+        r.update_backlog(1, 0.5, qlens=[1])
+        r.update_backlog(0, 0.0)  # drained; historical backlog-only style
+        assert r.route() == 0     # falls back to backlog ordering for 0
+
+    def test_jsq_without_reports_falls_back_to_backlog(self):
+        # no caller ever reported qlens: JSQ must degrade to backlog
+        # ordering, not dogpile replica 0 on an all-zeros tie.
+        r = ReplicaRouter(3, dispatcher=JoinShortestQueueDispatcher())
+        r.update_backlog(0, 0.5)
+        r.update_backlog(1, 0.002)
+        r.update_backlog(2, 0.3)
+        assert r.route() == 1
+
+    def test_stability_aware_prefers_fast_replica(self):
+        table = ProfileTable.paper_rtx3080()
+        sa = StabilityAwareDispatcher(slo=0.050, power_d=2)
+        sa.reset(0)
+        r = ReplicaRouter(2, straggler=StragglerPolicy(2, alpha=1.0),
+                          table=table, dispatcher=sa)
+        # equal raw backlog, replica 1 runs 2.5x slow (not yet detached)
+        r.update_backlog(0, 0.02)
+        r.update_backlog(1, 0.02)
+        r.observe_quantum(1, observed_s=0.25, expected_s=0.1)
+        assert r.route(model=2) == 0
+
+    def test_sticky_key_still_spills_with_custom_dispatcher(self):
+        r = ReplicaRouter(2, spill_factor=2.0,
+                          dispatcher=JoinShortestQueueDispatcher())
+        home = ReplicaRouter(2).route(key="s")
+        r.update_backlog(home, 10.0, qlens=[100])
+        r.update_backlog(1 - home, 0.1, qlens=[1])
+        assert r.route(key="s") == 1 - home
+
+
 class TestBacklogEstimate:
     def test_full_batches_plus_remainder(self):
         table = ProfileTable.paper_rtx3080()
@@ -89,3 +179,53 @@ class TestBacklogEstimate:
     def test_empty_queues_zero(self):
         table = ProfileTable.paper_rtx3080()
         assert ReplicaRouter.backlog_from_queues(table, [0, 0, 0]) == 0.0
+
+    @given(q0=st.integers(0, 64), q1=st.integers(0, 64), q2=st.integers(0, 64),
+           max_batch=st.integers(1, 10))
+    @settings(max_examples=25, deadline=None)
+    def test_scheduler_drain_closed_form_pins_old_loop(self, q0, q1, q2,
+                                                       max_batch):
+        """Regression: the closed-form drain (full-batch quotient +
+        remainder rung) must reproduce the pre-refactor O(queue-length)
+        serve-loop exactly for any queue state and batch cap."""
+        table = ProfileTable.paper_rtx3080()
+        sched = make_scheduler("edgeserving", table,
+                               SchedulerConfig(max_batch=max_batch))
+        qlens = [q0, q1, q2]
+        new = ReplicaRouter.backlog_from_scheduler(sched, qlens)
+        e = table.num_exits - 1
+        old = 0.0
+        for m, n in enumerate(qlens):
+            while n > 0:
+                b = sched.batch_size(n)
+                old += table(m, e, b)
+                n -= b
+        # identical up to float summation order: the closed form computes
+        # full * L where the loop adds L full times (last-ulp difference).
+        assert new == pytest.approx(old, rel=1e-12, abs=0.0)
+
+
+class TestRouteBatchServiceShare:
+    def test_share_derived_from_profile_table(self):
+        table = ProfileTable.paper_rtx3080()
+        r = ReplicaRouter(2, table=table, max_batch=10)
+        e, cap = table.num_exits - 1, 10
+        expect = np.mean([table(m, e, cap) / cap
+                          for m in range(table.num_models)])
+        assert r._service_share == pytest.approx(expect)
+
+    def test_slow_fleet_spreads_less_eagerly_than_placeholder(self):
+        # A 7x-slower (Jetson-class) fleet has a 7x-larger per-request
+        # share, so a burst inflates backlogs proportionally faster.
+        fast = ReplicaRouter(2, table=ProfileTable.paper_rtx3080())
+        slow = ReplicaRouter(2, table=ProfileTable.paper_jetson_orin_nano())
+        assert slow._service_share == pytest.approx(7 * fast._service_share)
+        slow.route_batch(10)
+        fast.route_batch(10)
+        assert sum(r.backlog_s for r in slow.replicas) == pytest.approx(
+            7 * sum(r.backlog_s for r in fast.replicas))
+
+    def test_no_table_keeps_nominal_share(self):
+        r = ReplicaRouter(2)
+        r.route_batch(4)
+        assert sum(x.backlog_s for x in r.replicas) == pytest.approx(4e-3)

@@ -193,7 +193,10 @@ class TestSummarize:
     def test_empty_completions_still_zero(self, table):
         m = summarize([], table, slo=0.05, warmup_tasks=100,
                       residual_queue=7, dropped=3)
-        assert m.num_completed == 0 and m.violation_ratio == 0.0
+        # (late + dropped) / (done + dropped) with done empty: every
+        # accounted request was shed -> all violations.
+        assert m.num_completed == 0 and m.violation_ratio == 1.0
+        assert summarize([], table, slo=0.05).violation_ratio == 0.0
         # overload accounting survives the empty path in the right fields
         assert m.residual_queue == 7 and m.dropped == 3
         assert m.mean_batch == 0.0 and m.per_model == ()
