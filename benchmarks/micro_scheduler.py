@@ -1,10 +1,25 @@
 """Scheduler-step microbenchmarks: the online decision must fit inside the
-inter-quantum gap (sub-millisecond). Compares the paper's loop scheduler,
-the vectorised NumPy variant, and the Pallas scoring kernel (interpret mode
-on CPU — TPU numbers come from the same call with interpret=False)."""
+inter-quantum gap (sub-millisecond). Two studies:
+
+  * the classic loop-vs-vectorised-vs-lattice decision timing at edge scale
+    (M = 3, growing queue depth);
+  * the **scoring-backend study**: per-round stability-scoring latency of
+    every ``repro.core.scoring`` backend (numpy / jnp / pallas-interpret)
+    at M ∈ {4, 16, 64, 256} colocated queues, greedy and lattice layouts,
+    with cross-backend decision-equivalence asserted on both scalar-SLO and
+    heterogeneous-deadline snapshots before anything is timed. This is the
+    many-tenant regime the kernel docstring anticipates: numpy wins at edge
+    scale, jnp takes over from M ≳ 64. True-``pallas`` numbers come from
+    the same call on a TPU host; interpret mode here is the
+    correctness-path timing only.
+
+``REPRO_MICRO_SCHED_SMOKE=1`` (CI) restricts to M ∈ {4, 16} with fewer
+repetitions so the study runs in seconds on CPU-only runners.
+"""
 
 from __future__ import annotations
 
+import os
 import time
 from typing import List
 
@@ -22,12 +37,22 @@ from repro.core import (
 from repro.kernels.stability_score.ops import stability_scores
 from benchmarks.common import Row
 
+BACKENDS = ("numpy", "jnp", "pallas-interpret")
 
-def _snapshot(m_count: int, qlen: int, seed: int = 0) -> QueueSnapshot:
+
+def _snapshot(m_count: int, qlen: int, seed: int = 0,
+              het_tau: bool = False) -> QueueSnapshot:
     rng = np.random.default_rng(seed)
     waits = [np.sort(rng.uniform(0, 0.06, qlen))[::-1].copy()
              for _ in range(m_count)]
-    return QueueSnapshot(0.0, waits)
+    deadlines = None
+    if het_tau:
+        deadlines = [
+            np.where(rng.uniform(size=qlen) < 0.5,
+                     rng.uniform(0.02, 0.09, qlen), np.nan)
+            for _ in range(m_count)
+        ]
+    return QueueSnapshot(0.0, waits, deadlines)
 
 
 def _time(fn, n=50):
@@ -38,19 +63,84 @@ def _time(fn, n=50):
     return (time.perf_counter() - t0) / n * 1e6
 
 
+def _wide_table(m_count: int) -> ProfileTable:
+    """Tile the paper table out to ``m_count`` models with a deterministic
+    per-model speed spread (breaks symmetry so argmins are meaningful)."""
+    base = ProfileTable.paper_rtx3080()
+    reps = -(-m_count // base.num_models)
+    lat = np.tile(base.latency, (reps, 1, 1))[:m_count]
+    acc = np.tile(base.accuracy, (reps, 1))[:m_count]
+    scale = np.linspace(0.7, 1.3, m_count)[:, None, None]
+    return ProfileTable(
+        tuple(f"model{i}" for i in range(m_count)),
+        base.exit_names, base.batch_sizes, lat * scale, acc,
+        meta={"builder": "micro-wide", "platform": "synthetic"})
+
+
+def _backend_study(smoke: bool) -> List[Row]:
+    rows: List[Row] = []
+    qlen = 16
+    for m_count in ((4, 16) if smoke else (4, 16, 64, 256)):
+        table = _wide_table(m_count)
+        for lattice in (False, True):
+            scheds = {
+                be: (LatticeEdgeServingScheduler if lattice else
+                     VectorizedEdgeServingScheduler)(
+                         table,
+                         SchedulerConfig(slo=0.05, lattice=lattice,
+                                         backend=be))
+                for be in BACKENDS
+            }
+            # decision-equivalence pin: every backend must pick the same
+            # (model, exit, batch) on scalar-SLO *and* het-deadline state.
+            for het in (False, True):
+                s = _snapshot(m_count, qlen, seed=m_count + het, het_tau=het)
+                picks = {
+                    be: (d.model, d.exit_idx, d.batch_size)
+                    for be, d in ((be, sc.decide(s))
+                                  for be, sc in scheds.items())
+                }
+                assert len(set(picks.values())) == 1, (
+                    f"backend decision mismatch at M={m_count} "
+                    f"lattice={lattice} het={het}: {picks}")
+            # scoring latency: one shared enumeration, timed scoring only
+            snap = _snapshot(m_count, qlen, seed=m_count)
+            ref = scheds["numpy"]
+            cq, cb, _, cl, _ = ref.enumerate_candidates(snap)
+            us_numpy = None
+            for be in BACKENDS:
+                sc = scheds[be]
+                reps = (3 if smoke else 8) if be == "pallas-interpret" else \
+                    (10 if smoke else 40)
+                us = _time(
+                    lambda sc=sc: sc.score_candidates(snap, cl, cb, cq),
+                    n=reps)
+                if be == "numpy":
+                    us_numpy = us
+                tag = "-lattice" if lattice else ""
+                rows.append(Row(
+                    f"micro/backend{tag}/{be}/M{m_count}", us,
+                    f"n_candidates={len(cq)};match=yes;"
+                    f"speedup_vs_numpy={us_numpy / us:.2f}x"))
+    return rows
+
+
 def run() -> List[Row]:
+    smoke = bool(os.environ.get("REPRO_MICRO_SCHED_SMOKE"))
     rows = []
     table = ProfileTable.paper_rtx3080()
     cfg = SchedulerConfig(slo=0.05)
     lat_cfg = SchedulerConfig(slo=0.05, lattice=True)
-    for m_count, qlen in [(3, 16), (3, 256), (3, 2048)]:
+    depths = [(3, 16), (3, 256)] if smoke else [(3, 16), (3, 256), (3, 2048)]
+    for m_count, qlen in depths:
         snap = _snapshot(m_count, qlen)
         loop = EdgeServingScheduler(table, cfg)
         vec = VectorizedEdgeServingScheduler(table, cfg)
         lattice = LatticeEdgeServingScheduler(table, lat_cfg)
-        us_loop = _time(lambda: loop.decide(snap))
-        us_vec = _time(lambda: vec.decide(snap))
-        us_lat = _time(lambda: lattice.decide(snap))
+        n = 10 if smoke else 50
+        us_loop = _time(lambda: loop.decide(snap), n=n)
+        us_vec = _time(lambda: vec.decide(snap), n=n)
+        us_lat = _time(lambda: lattice.decide(snap), n=n)
         n_cands = len(lattice.enumerate_candidates(snap)[0])
         rows.append(Row(f"micro/scheduler-loop/M{m_count}xQ{qlen}", us_loop,
                         f"decisions_per_s={1e6/us_loop:.0f}"))
@@ -87,4 +177,6 @@ def run() -> List[Row]:
     us = _time(fn, n=10)
     rows.append(Row(f"micro/stability-kernel-lattice/N{n_cands}xQ{qlen}", us,
                     "pallas_interpret_cpu"))
+
+    rows.extend(_backend_study(smoke))
     return rows

@@ -50,6 +50,11 @@ from repro.core.scheduler import (
     SchedulerConfig,
     VectorizedEdgeServingScheduler,
 )
+from repro.core.scoring import (
+    SCORING_BACKENDS,
+    ScoringBackend,
+    make_scoring_backend,
+)
 from repro.core.simulator import ServingSimulator, SimResult, run_experiment
 from repro.core.sweep import SweepResult, SweepRunner, SweepSpec
 from repro.core.traffic import paper_rate_vector, poisson_arrivals
@@ -79,6 +84,7 @@ from repro.core.urgency import (
 __all__ = [
     "SCENARIOS",
     "SCHEDULERS",
+    "SCORING_BACKENDS",
     "AllEarlyScheduler",
     "AllFinalDeadlineAwareScheduler",
     "AllFinalScheduler",
@@ -112,6 +118,7 @@ __all__ = [
     "RoundRobinDispatcher",
     "Scheduler",
     "SchedulerConfig",
+    "ScoringBackend",
     "ServiceQueue",
     "ServingMetrics",
     "ServingSimulator",
@@ -133,6 +140,7 @@ __all__ = [
     "make_fleet",
     "make_scenario",
     "make_scheduler",
+    "make_scoring_backend",
     "paper_rate_vector",
     "poisson_arrivals",
     "record_trace",

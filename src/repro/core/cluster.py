@@ -70,9 +70,10 @@ __all__ = [
     "make_fleet",
 ]
 
-# Matches ServingSimulator's idle-advance epsilon so a G=1 cluster schedules
-# at bit-identical timestamps (waits feed the stability score directly).
-_EPS = 1e-12
+# Idle wake-ups advance by one float64 ulp (np.nextafter), matching
+# ServingSimulator's idle-advance so a G=1 cluster schedules at
+# bit-identical timestamps (waits feed the stability score directly).
+# A fixed epsilon would stall below float64 resolution at large t.
 
 
 # ---------------------------------------------------------------------------
@@ -404,12 +405,12 @@ class _Device:
 
     def poke(self, t: float) -> None:
         """An arrival landed at ``t`` while this device may be idle: make
-        sure a scheduling round runs at ``t + eps`` (the single-device
+        sure a scheduling round runs one ulp past ``t`` (the single-device
         simulator's idle-advance), unless one is already due earlier or a
         quantum is in flight (its end-round will see the queue)."""
         if self.done or not self.alive or self.in_quantum:
             return
-        wake = t + _EPS
+        wake = np.nextafter(t, np.inf)
         if self.pending_at is None or wake < self.pending_at:
             self.pending_at = wake
 
@@ -640,7 +641,7 @@ class ClusterSimulator(DeviceLoadView):
             if dev.queued() and hasattr(dev.scheduler, "next_wake"):
                 wake = dev.scheduler.next_wake(snapshot)
                 if wake is not None:
-                    dev.pending_at = max(t, wake) + _EPS
+                    dev.pending_at = np.nextafter(max(t, wake), np.inf)
             return
         service = dev.service_time(decision.model, decision.exit_idx,
                                    decision.batch_size)

@@ -17,6 +17,7 @@ import numpy as np
 from repro.core.profile import ProfileTable
 from repro.core.queues import QueueSnapshot
 from repro.core.request import Decision
+from repro.core.scoring import make_scoring_backend
 from repro.core.urgency import DEFAULT_CLIP, urgency_np
 
 
@@ -39,6 +40,12 @@ class SchedulerConfig:
       batch_ladder: explicit lattice rungs; rungs above the Eq. 5 cap are
                   dropped and the cap itself is always included. None =
                   geometric ladder {1, 2, 4, ...} up to the cap.
+      backend:    stability-score scoring engine for the Algorithm-1
+                  schedulers: ``numpy`` (default; float64 host reference),
+                  ``jnp`` (jit/XLA), ``pallas``, or ``pallas-interpret``
+                  (see ``repro.core.scoring`` and docs/scheduler.md
+                  "Scoring backends"). All backends understand per-task
+                  deadlines; baselines ignore the knob.
     """
 
     slo: float = 0.050
@@ -47,6 +54,7 @@ class SchedulerConfig:
     allowed_exits: Optional[Tuple[int, ...]] = None
     lattice: bool = False
     batch_ladder: Optional[Tuple[int, ...]] = None
+    backend: str = "numpy"
 
 
 class Scheduler:
@@ -57,6 +65,7 @@ class Scheduler:
     def __init__(self, table: ProfileTable, config: SchedulerConfig):
         self.table = table
         self.config = config
+        self.scoring = make_scoring_backend(config.backend)
         exits = config.allowed_exits or tuple(range(table.num_exits))
         # Deduplicate + sort shallow->deep once; Eq. 6 scans deep->shallow.
         self._exits = tuple(sorted(set(exits)))
@@ -126,6 +135,81 @@ class Scheduler:
         )
         return batch, exit_idx, lat
 
+    # -- shared candidate enumeration + scoring (Eq. 5/6 -> Eq. 4/7) ---------
+
+    def enumerate_candidates(
+        self, snapshot: QueueSnapshot
+    ) -> "tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]":
+        """Flatten the feasible (m, e, B) lattice for this snapshot.
+
+        The one candidate-enumeration step shared by every Algorithm-1
+        scheduler: with ``config.lattice=False`` each non-empty queue
+        contributes exactly its Eq. 5 candidate (the greedy layout); with
+        the lattice on, one candidate per ladder rung. Returns
+        ``(cand_queue, cand_batch, cand_exit, cand_latency, cand_wmax)``
+        arrays of equal length N, in (queue asc, batch desc) order. Exits
+        follow the Eq. 6 deepest-feasible/fallback rule at each rung's
+        latency, bounded by the head-of-line task's own deadline.
+        """
+        queues: List[int] = []
+        batches: List[int] = []
+        exits: List[int] = []
+        lats: List[float] = []
+        wmaxes: List[float] = []
+        for m in snapshot.nonempty():
+            w_max = snapshot.w_max(m)
+            tau_m = snapshot.oldest_tau(m, self.config.slo)
+            for b in self.batch_candidates(snapshot.qlen(m)):
+                e, lat = self.select_exit(m, w_max, b, tau=tau_m)
+                queues.append(m)
+                batches.append(b)
+                exits.append(e)
+                lats.append(lat)
+                wmaxes.append(w_max)
+        return (
+            np.asarray(queues, dtype=np.int64),
+            np.asarray(batches, dtype=np.int64),
+            np.asarray(exits, dtype=np.int64),
+            np.asarray(lats, dtype=np.float64),
+            np.asarray(wmaxes, dtype=np.float64),
+        )
+
+    def score_candidates(
+        self,
+        snapshot: QueueSnapshot,
+        cand_latency: np.ndarray,
+        cand_batch: np.ndarray,
+        cand_queue: np.ndarray,
+    ) -> np.ndarray:
+        """One scoring entry point for all backends (Sec. V-C prediction +
+        Eq. 4): per-task deadlines ride along as an [M, maxQ] tau matrix
+        when the snapshot carries any, else the scalar SLO fast path."""
+        w, mask = snapshot.padded()
+        tau = (snapshot.padded_taus(self.config.slo)
+               if snapshot.has_deadlines else self.config.slo)
+        return self.scoring.score(
+            w, mask, cand_latency, cand_batch, cand_queue,
+            tau, self.config.clip)
+
+    def decide_scored(self, snapshot: QueueSnapshot) -> Optional[Decision]:
+        """The shared Algorithm-1 decision path: enumerate -> score through
+        the configured backend -> Eq. 7 argmin (ties -> larger w_max, then
+        candidate order: more urgent queue first, then larger batch)."""
+        cand_queue, batches, exits, lats, w_maxes = self.enumerate_candidates(
+            snapshot)
+        if len(cand_queue) == 0:
+            return None
+        scores = self.score_candidates(snapshot, lats, batches, cand_queue)
+        order = np.lexsort((-w_maxes, scores))
+        i = int(order[0])
+        return Decision(
+            model=int(cand_queue[i]),
+            exit_idx=int(exits[i]),
+            batch_size=int(batches[i]),
+            predicted_latency=float(lats[i]),
+            stability_score=float(scores[i]),
+        )
+
     # -- policy ---------------------------------------------------------------
 
     def decide(self, snapshot: QueueSnapshot) -> Optional[Decision]:
@@ -142,11 +226,30 @@ class Scheduler:
 
 
 class EdgeServingScheduler(Scheduler):
-    """Algorithm 1: stability-score deadline-aware model selection."""
+    """Algorithm 1: stability-score deadline-aware model selection.
+
+    With the default ``backend="numpy"`` this is the paper-exact Python
+    loop (the reference the vectorised/accelerated paths are tested
+    against); any other backend routes through the shared
+    ``decide_scored`` path so accelerated scoring is one config switch
+    away for every Algorithm-1 scheduler.
+    """
 
     name = "edgeserving"
 
+    def batch_candidates(self, qlen: int) -> Tuple[int, ...]:
+        """The paper-exact policy always uses the single Eq. 5 batch —
+        `config.lattice` upgrades ``make_scheduler("edgeserving")`` to
+        :class:`LatticeEdgeServingScheduler` rather than altering this
+        class, so the accelerated `decide_scored` route enumerates exactly
+        the candidates the reference loop scores (backend choice can never
+        change this policy's decisions)."""
+        cap = self.batch_size(qlen)
+        return (cap,) if cap > 0 else ()
+
     def decide(self, snapshot: QueueSnapshot) -> Optional[Decision]:
+        if self.scoring.name != "numpy":
+            return self.decide_scored(snapshot)
         nonempty = snapshot.nonempty()
         if not nonempty:
             return None
@@ -190,58 +293,22 @@ class EdgeServingScheduler(Scheduler):
 
 
 class VectorizedEdgeServingScheduler(Scheduler):
-    """Numerically identical to EdgeServingScheduler, NumPy-vectorised.
+    """Numerically identical to EdgeServingScheduler, vectorised.
 
-    Beyond-paper engineering: one O(M^2 * maxQ) padded-matrix evaluation per
-    round instead of Python loops; this is also the reference for the
-    jnp/Pallas scoring kernels (see repro.kernels.stability_score).
+    Beyond-paper engineering: one O(M^2 * maxQ) padded-matrix evaluation
+    per round instead of Python loops, dispatched through the configured
+    :class:`repro.core.scoring.ScoringBackend` (numpy float64 by default —
+    bitwise-identical to the historical implementation — or jnp/Pallas for
+    the many-queue regime).
     """
 
     name = "edgeserving-vec"
 
     def decide(self, snapshot: QueueSnapshot) -> Optional[Decision]:
-        nonempty = snapshot.nonempty()
-        if not nonempty:
-            return None
-        tau, clip = self.config.slo, self.config.clip
-        w, mask = snapshot.padded()
-        m_count, max_q = w.shape
-        # Scalar tau unless the snapshot carries per-task deadlines; the
-        # [M, maxQ] matrix broadcasts over the candidate axis below.
-        tau_b = snapshot.padded_taus(tau)[None, :, :] if snapshot.has_deadlines else tau
-
-        batches = np.zeros(m_count, dtype=np.int64)
-        exits = np.zeros(m_count, dtype=np.int64)
-        lats = np.zeros(m_count, dtype=np.float64)
-        for m in nonempty:
-            batches[m], exits[m], lats[m] = self.candidate(snapshot, m)
-
-        shifted = w[None, :, :] + lats[:, None, None]
-        urg = np.minimum(
-            np.exp(np.minimum(shifted / tau_b - 1.0, np.log(clip))), clip
-        ) * mask[None, :, :]
-        total = urg.sum(axis=(1, 2))
-        pos = np.arange(max_q)[None, :]
-        served = (pos < batches[:, None]).astype(np.float32)
-        own = urg[np.arange(m_count), np.arange(m_count), :]
-        scores = total - (own * served).sum(axis=1)
-
-        ne = np.array(nonempty)
-        w_maxes = np.array([snapshot.w_max(m) for m in nonempty])
-        cand_scores = scores[ne]
-        # argmin with w_max tiebreak (serve the more urgent queue on ties)
-        order = np.lexsort((-w_maxes, cand_scores))
-        m_star = int(ne[order[0]])
-        return Decision(
-            model=m_star,
-            exit_idx=int(exits[m_star]),
-            batch_size=int(batches[m_star]),
-            predicted_latency=float(lats[m_star]),
-            stability_score=float(scores[m_star]),
-        )
+        return self.decide_scored(snapshot)
 
 
-class LatticeEdgeServingScheduler(Scheduler):
+class LatticeEdgeServingScheduler(VectorizedEdgeServingScheduler):
     """Joint (model, exit, batch) candidate-lattice scheduling.
 
     Beyond-paper extension of Algorithm 1: instead of fixing
@@ -249,9 +316,10 @@ class LatticeEdgeServingScheduler(Scheduler):
     non-empty queue contributes one candidate per batch-ladder rung (see
     ``Scheduler.batch_candidates``), each with its own Eq. 6 deepest-feasible
     exit at that batch's latency. All candidates are scored with the same
-    Sec. V-C queue-status prediction in one padded vectorised pass (the
-    NumPy twin of the ``repro.kernels.stability_score`` lattice kernel), and
-    the global argmin wins.
+    Sec. V-C queue-status prediction in one padded pass through the
+    configured scoring backend (numpy / jnp / the fused
+    ``repro.kernels.stability_score`` lattice kernel), and the global
+    argmin wins.
 
     Why this helps under tight deadlines: a smaller-than-Eq.-5 batch has a
     lower service latency L, which (a) shifts every other queue's tasks less
@@ -277,71 +345,3 @@ class LatticeEdgeServingScheduler(Scheduler):
         if not config.lattice:
             config = dataclasses.replace(config, lattice=True)
         super().__init__(table, config)
-
-    def enumerate_candidates(
-        self, snapshot: QueueSnapshot
-    ) -> "tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]":
-        """Flatten the feasible (m, e, B) lattice for this snapshot.
-
-        Returns ``(cand_queue, cand_batch, cand_exit, cand_latency,
-        cand_wmax)`` arrays of equal length N, in (queue asc, batch desc)
-        order. Exits follow the Eq. 6 deepest-feasible/fallback rule at each
-        rung's latency.
-        """
-        queues: List[int] = []
-        batches: List[int] = []
-        exits: List[int] = []
-        lats: List[float] = []
-        wmaxes: List[float] = []
-        for m in snapshot.nonempty():
-            w_max = snapshot.w_max(m)
-            tau_m = snapshot.oldest_tau(m, self.config.slo)
-            for b in self.batch_candidates(snapshot.qlen(m)):
-                e, lat = self.select_exit(m, w_max, b, tau=tau_m)
-                queues.append(m)
-                batches.append(b)
-                exits.append(e)
-                lats.append(lat)
-                wmaxes.append(w_max)
-        return (
-            np.asarray(queues, dtype=np.int64),
-            np.asarray(batches, dtype=np.int64),
-            np.asarray(exits, dtype=np.int64),
-            np.asarray(lats, dtype=np.float64),
-            np.asarray(wmaxes, dtype=np.float64),
-        )
-
-    def decide(self, snapshot: QueueSnapshot) -> Optional[Decision]:
-        cand_queue, batches, exits, lats, w_maxes = self.enumerate_candidates(
-            snapshot)
-        n = len(cand_queue)
-        if n == 0:
-            return None
-        tau, clip = self.config.slo, self.config.clip
-        w, mask = snapshot.padded()
-        max_q = w.shape[1]
-        tau_b = snapshot.padded_taus(tau)[None, :, :] if snapshot.has_deadlines else tau
-
-        # One [N, M, maxQ] scoring pass — op-for-op identical to
-        # VectorizedEdgeServingScheduler so the restricted lattice is
-        # bitwise-equivalent (and to the Pallas lattice kernel semantics).
-        shifted = w[None, :, :] + lats[:, None, None]
-        urg = np.minimum(
-            np.exp(np.minimum(shifted / tau_b - 1.0, np.log(clip))), clip
-        ) * mask[None, :, :]
-        total = urg.sum(axis=(1, 2))
-        pos = np.arange(max_q)[None, :]
-        served = (pos < batches[:, None]).astype(np.float32)
-        own = urg[np.arange(n), cand_queue, :]
-        scores = total - (own * served).sum(axis=1)
-
-        # argmin; ties -> larger w_max, then candidate order (batch desc).
-        order = np.lexsort((-w_maxes, scores))
-        i = int(order[0])
-        return Decision(
-            model=int(cand_queue[i]),
-            exit_idx=int(exits[i]),
-            batch_size=int(batches[i]),
-            predicted_latency=float(lats[i]),
-            stability_score=float(scores[i]),
-        )

@@ -129,7 +129,12 @@ class ServingSimulator:
                 candidates = [x for x in (wake, next_t) if x is not None]
                 if not candidates:
                     break  # no work will ever appear again
-                t = max(t, min(candidates)) + 1e-12
+                # Strict progress: a fixed epsilon falls below half a
+                # float64 ulp once t >= 16384 s (e.g. trace replay with
+                # wall-clock offsets) and the loop spins forever on a
+                # scheduler whose next_wake keeps returning the same
+                # instant; one-ulp advance makes progress at any magnitude.
+                t = np.nextafter(max(t, min(candidates)), np.inf)
                 if t > horizon + self.drain_cap:
                     break
                 continue

@@ -58,6 +58,11 @@ class SweepSpec:
     override. ``scenario`` names a ``repro.core.workloads.SCENARIOS`` entry;
     ``scenario_kwargs`` (a tuple of (key, value) pairs, to stay hashable)
     parameterises it. ``deadlines`` is an optional per-model SLO vector.
+    ``backend`` selects the stability-score scoring engine
+    (``repro.core.scoring``: numpy / jnp / pallas / pallas-interpret) for
+    the cell's Algorithm-1 schedulers — cluster cells pass it to every
+    per-device scheduler — so a whole sweep or fleet can run accelerated
+    scoring with one field.
 
     Cluster cells: setting ``fleet`` (a ``repro.core.cluster.FLEETS`` name)
     switches the cell from the single-device simulator to a
@@ -84,6 +89,7 @@ class SweepSpec:
     fleet_size: int = 1
     dispatcher: str = "least-loaded"
     fail_at: Tuple[Tuple[int, float], ...] = ()
+    backend: str = "numpy"
 
     def rate_vector(self) -> List[float]:
         if self.rates is not None:
@@ -93,7 +99,10 @@ class SweepSpec:
     def title(self) -> str:
         if self.label:
             return self.label
-        base = f"{self.policy}/{self.scenario}/lam{self.rate:g}/seed{self.seed}"
+        policy = self.policy
+        if self.backend != "numpy":
+            policy = f"{policy}[{self.backend}]"
+        base = f"{policy}/{self.scenario}/lam{self.rate:g}/seed{self.seed}"
         if self.fleet is not None:
             base = f"{self.dispatcher}/{self.fleet}x{self.fleet_size}/{base}"
         return base
@@ -183,7 +192,8 @@ class SweepRunner:
         """One serving experiment, fully determined by (runner, spec)."""
         t0 = time.perf_counter()
         rates = spec.rate_vector()
-        cfg = SchedulerConfig(slo=spec.slo, max_batch=spec.max_batch)
+        cfg = SchedulerConfig(slo=spec.slo, max_batch=spec.max_batch,
+                              backend=spec.backend)
         process = make_scenario(
             spec.scenario, rates, deadlines=spec.deadlines,
             **dict(spec.scenario_kwargs),

@@ -92,7 +92,7 @@ def lattice_stability_scores(
     cand_latency: jax.Array,
     cand_batch: jax.Array,
     cand_queue: jax.Array,
-    tau: float,
+    tau,
     clip: float = DEFAULT_CLIP,
 ) -> jax.Array:
     """Score a flattened (model, exit, batch) candidate lattice (Eq. 4-7).
@@ -113,6 +113,9 @@ def lattice_stability_scores(
       cand_latency: ``[N]`` per-candidate profiled latency ``L_n``.
       cand_batch:   ``[N]`` per-candidate batch size ``B_n`` (int).
       cand_queue:   ``[N]`` queue index each candidate serves (int in [0, M)).
+      tau:          global SLO scalar, or an ``[M, maxQ]`` matrix of
+                    per-task deadlines aligned with ``w`` (heterogeneous-SLO
+                    workloads; broadcast over the candidate axis).
     Returns:
       ``[N]`` stability score ``S_n`` for each candidate.
     """
@@ -120,11 +123,12 @@ def lattice_stability_scores(
     n = cand_latency.shape[0]
     pos = jnp.arange(max_q)[None, :]                      # [1, maxQ]
     served = pos < cand_batch[:, None]                    # [N, maxQ]
+    tau_b = tau[None, :, :] if jnp.ndim(tau) == 2 else tau
 
     # f(w + L_n) for all tasks, per candidate: [N, M, maxQ]
     shifted = w[None, :, :] + cand_latency[:, None, None]
     urg = jnp.minimum(
-        jnp.exp(jnp.minimum(shifted / tau - 1.0, jnp.log(clip))), clip
+        jnp.exp(jnp.minimum(shifted / tau_b - 1.0, jnp.log(clip))), clip
     ) * mask[None, :, :]
 
     total = jnp.sum(urg, axis=(1, 2))                     # [N] sum over everything
@@ -140,7 +144,7 @@ def candidate_stability_scores(
     mask: jax.Array,
     cand_latency: jax.Array,
     cand_batch: jax.Array,
-    tau: float,
+    tau,
     clip: float = DEFAULT_CLIP,
 ) -> jax.Array:
     """Score every candidate model choice in one shot (vectorised Eq. 4-7).

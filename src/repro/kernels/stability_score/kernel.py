@@ -11,8 +11,15 @@ tier (hundreds of colocated models / per-tenant queues) makes it a
 per-round hot spot on the host: fusing exp/clip/mask/row-sum into one VMEM
 pass keeps the scheduling quantum in the microsecond range.
 
-Tiling: grid = (N/bn,); per step the full wait matrix [M, Q] sits in VMEM
-(tens of KB for realistic M*Q) against a [bn] slab of candidates.
+Deadlines: ``tau`` is an ``[M, Q]`` per-task deadline matrix held in VMEM
+alongside the wait matrix and broadcast over the candidate axis
+(heterogeneous-SLO workloads); scalar-SLO callers pass the filled matrix
+the ops wrapper builds for them — bitwise-identical to dividing by the
+scalar. ``clip`` rides along as a (1, 1) traced scalar so an SLO/clip sweep
+never recompiles (see ops.py).
+
+Tiling: grid = (N/bn,); per step the full wait/tau matrices [M, Q] sit in
+VMEM (tens of KB for realistic M*Q) against a [bn] slab of candidates.
 """
 
 from __future__ import annotations
@@ -24,10 +31,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _score_kernel(w_ref, mask_ref, lat_ref, batch_ref, queue_ref, out_ref,
-                  *, tau: float, clip: float, bn: int):
+def _score_kernel(w_ref, mask_ref, tau_ref, clip_ref, lat_ref, batch_ref,
+                  queue_ref, out_ref, *, bn: int):
     w = w_ref[...].astype(jnp.float32)                  # [M, Q]
     mask = mask_ref[...].astype(jnp.float32)            # [M, Q]
+    tau = tau_ref[...].astype(jnp.float32)              # [M, Q]
+    clip = clip_ref[0, 0]                               # traced scalar
     lat = lat_ref[...].astype(jnp.float32)              # [bn]
     batch = batch_ref[...]                              # [bn] int32
     queue = queue_ref[...]                              # [bn] int32
@@ -37,7 +46,7 @@ def _score_kernel(w_ref, mask_ref, lat_ref, batch_ref, queue_ref, out_ref,
     # shifted urgency for each candidate in the slab: [bn, M, Q]
     shifted = w[None] + lat[:, None, None]
     urg = jnp.minimum(
-        jnp.exp(jnp.minimum(shifted / tau - 1.0, log_clip)), clip
+        jnp.exp(jnp.minimum(shifted / tau[None] - 1.0, log_clip)), clip
     ) * mask[None]
     total = jnp.sum(urg, axis=(1, 2))                   # [bn]
 
@@ -52,14 +61,19 @@ def _score_kernel(w_ref, mask_ref, lat_ref, batch_ref, queue_ref, out_ref,
 
 
 def stability_scores_kernel(w, mask, cand_latency, cand_batch,
-                            cand_queue=None, *, tau: float, clip: float = 10.0,
+                            cand_queue=None, *, tau, clip=10.0,
                             block_m: int = 8, interpret: bool = False):
     """w, mask [M, Q]; cand_latency [N] f32; cand_batch, cand_queue [N] i32
     -> [N] f32. ``cand_queue=None`` means the one-candidate-per-queue greedy
-    layout (N == M, candidate n serves queue n)."""
+    layout (N == M, candidate n serves queue n). ``tau`` is a scalar SLO or
+    an [M, Q] per-task deadline matrix; ``clip`` a (traced) scalar."""
     m, q = w.shape
     if cand_queue is None:
         cand_queue = jnp.arange(m, dtype=jnp.int32)
+    # scalar tau -> filled matrix (bitwise-identical to scalar division);
+    # matrix tau is forwarded as-is.
+    tau = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (m, q))
+    clip = jnp.asarray(clip, jnp.float32).reshape(1, 1)
     n = cand_latency.shape[0]
     bn = min(block_m, n)
     # pad N to a multiple of bn (padded candidates score garbage; sliced off)
@@ -71,13 +85,15 @@ def stability_scores_kernel(w, mask, cand_latency, cand_batch,
     np_ = n + pad
     grid = (np_ // bn,)
 
-    kernel = functools.partial(_score_kernel, tau=tau, clip=clip, bn=bn)
+    kernel = functools.partial(_score_kernel, bn=bn)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((m, q), lambda ic: (0, 0)),
             pl.BlockSpec((m, q), lambda ic: (0, 0)),
+            pl.BlockSpec((m, q), lambda ic: (0, 0)),
+            pl.BlockSpec((1, 1), lambda ic: (0, 0)),
             pl.BlockSpec((bn,), lambda ic: (ic,)),
             pl.BlockSpec((bn,), lambda ic: (ic,)),
             pl.BlockSpec((bn,), lambda ic: (ic,)),
@@ -85,5 +101,5 @@ def stability_scores_kernel(w, mask, cand_latency, cand_batch,
         out_specs=pl.BlockSpec((bn,), lambda ic: (ic,)),
         out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
         interpret=interpret,
-    )(w, mask, cand_latency, cand_batch, cand_queue)
+    )(w, mask, tau, clip, cand_latency, cand_batch, cand_queue)
     return out[:n]

@@ -13,16 +13,22 @@ from repro.kernels.stability_score.ref import (
 )
 
 
-@functools.partial(jax.jit, static_argnames=("tau", "clip", "block_m",
-                                             "interpret", "use_kernel"))
+# tau and clip are *traced* operands: a fig8-style SLO sweep (or a clip
+# ablation) reuses one compiled executable across every value instead of
+# recompiling per deadline (pinned by a _cache_size check in
+# tests/test_scoring.py). Only layout/shape knobs stay static.
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret",
+                                             "use_kernel"))
 def stability_scores(w, mask, cand_latency, cand_batch, cand_queue=None,
-                     *, tau: float, clip: float = 10.0, block_m: int = 8,
+                     *, tau, clip=10.0, block_m: int = 8,
                      interpret: bool = False, use_kernel: bool = True):
     """Score a flattened candidate lattice in one fused pass (Eq. 3-7).
 
     w, mask [M, maxQ] (FIFO-sorted waits + validity); cand_latency [N];
     cand_batch [N]; cand_queue [N] maps each candidate to the queue it
     serves (None = the greedy one-candidate-per-queue layout with N == M).
+    ``tau`` is the scalar SLO or an [M, maxQ] per-task deadline matrix
+    (heterogeneous SLOs; aligned with ``w``, broadcast over candidates).
     Returns [N] predicted post-decision stability scores.
     """
     if not use_kernel:

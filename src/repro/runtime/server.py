@@ -94,6 +94,7 @@ class ServingEngine:
         self.dropped = 0
         self._compiled: Dict[Tuple[int, int, int], Callable] = {}
         self._busy_s = 0.0
+        self._unsubmitted = 0  # trace tail never ingested (drain-cap exit)
 
     # -- ingress ---------------------------------------------------------------
 
@@ -138,21 +139,36 @@ class ServingEngine:
         duration: float,
         drain: bool = True,
         idle_sleep: float = 1e-4,
+        drain_cap: float = 600.0,
     ) -> "tuple[list[Completion], float]":
         """Serve a pre-generated arrival trace in real time.
 
         Arrival times in the trace are relative to loop start; requests are
         enqueued when the wall clock passes them (paper: requests arrive
         continuously, regardless of accelerator state).
+
+        ``drain_cap`` mirrors the simulator's semantics: a hard wall-clock
+        cap on post-``duration`` draining. Without it, ``drain=True``
+        busy-waits forever whenever a policy leaves queues non-empty while
+        ``decide`` keeps returning ``None`` (e.g. a pruning baseline that
+        sheds nothing further but never dispatches). Requests stranded at
+        the cap stay queued and are surfaced via ``metrics().residual_queue``.
         """
         t0 = self.clock()
         next_arr = 0
         n = len(arrivals)
+        self._unsubmitted = 0
         while True:
             now = self.clock() - t0
             while next_arr < n and arrivals[next_arr].arrival <= now:
                 self.submit(arrivals[next_arr])
                 next_arr += 1
+            if now > duration + drain_cap:
+                # stranded work stays queued; the never-ingested trace tail
+                # is counted too so completions + dropped + residual still
+                # equals the arrival count (mirrors the simulator).
+                self._unsubmitted = n - next_arr
+                break
             if now > duration and next_arr >= n:
                 if not drain or all(len(q) == 0 for q in self.queues):
                     break
@@ -184,6 +200,7 @@ class ServingEngine:
         return summarize(
             self.completions, table, slo, warmup_tasks=warmup_tasks,
             busy_time=self._busy_s, span=span,
-            residual_queue=sum(len(q) for q in self.queues),
+            residual_queue=(sum(len(q) for q in self.queues)
+                            + self._unsubmitted),
             dropped=self.dropped,
         )

@@ -1,0 +1,285 @@
+"""Scoring-backend tests: registry, cross-backend decision equivalence
+(greedy + lattice, scalar and per-task tau), the het-tau kernel paths, and
+the no-recompile guarantee for traced tau/clip."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    EdgeServingScheduler,
+    LatticeEdgeServingScheduler,
+    ProfileTable,
+    QueueSnapshot,
+    SCORING_BACKENDS,
+    SchedulerConfig,
+    VectorizedEdgeServingScheduler,
+    make_scoring_backend,
+)
+from repro.kernels.stability_score.ops import stability_scores
+from repro.kernels.stability_score.ref import lattice_stability_scores_ref
+
+# "pallas" (compiled) is CPU-hostile; interpret mode runs the identical
+# kernel semantics everywhere, so CI equivalence runs cover it via
+# pallas-interpret and TPU hosts exercise the compiled path.
+CPU_BACKENDS = ("numpy", "jnp", "pallas-interpret")
+
+
+@pytest.fixture(scope="module")
+def table():
+    return ProfileTable.paper_rtx3080()
+
+
+def random_snapshot(rng, m_count=3, max_len=10, het_tau=False):
+    waits = [
+        np.sort(rng.uniform(0, 0.08, size=rng.integers(0, max_len)))[::-1]
+        for _ in range(m_count)
+    ]
+    deadlines = None
+    if het_tau:
+        deadlines = [
+            np.where(rng.uniform(size=len(w)) < 0.5,
+                     rng.uniform(0.02, 0.09, size=len(w)), np.nan)
+            for w in waits
+        ]
+    return QueueSnapshot(0.0, waits, deadlines)
+
+
+class TestBackendRegistry:
+    def test_all_names_construct(self):
+        for name in SCORING_BACKENDS:
+            assert make_scoring_backend(name).name == name
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(ValueError, match="unknown scoring backend"):
+            make_scoring_backend("cuda")
+
+    def test_scheduler_config_builds_backend(self, table):
+        s = VectorizedEdgeServingScheduler(
+            table, SchedulerConfig(backend="jnp"))
+        assert s.scoring.name == "jnp"
+
+    def test_factory_is_cached(self):
+        assert make_scoring_backend("numpy") is make_scoring_backend("numpy")
+
+
+class TestDecisionEquivalence:
+    """All backends must produce identical Decisions on the equivalence
+    suite: greedy and lattice layouts, scalar and per-task tau."""
+
+    @given(seed=st.integers(0, 2**16),
+           lattice=st.sampled_from([False, True]),
+           het=st.sampled_from([False, True]))
+    @settings(max_examples=25, deadline=None)
+    def test_property_backends_agree(self, table, seed, lattice, het):
+        rng = np.random.default_rng(seed)
+        snapshot = random_snapshot(rng, het_tau=het)
+        cls = (LatticeEdgeServingScheduler if lattice
+               else VectorizedEdgeServingScheduler)
+        picks = {}
+        for be in CPU_BACKENDS:
+            d = cls(table, SchedulerConfig(
+                slo=0.05, lattice=lattice, backend=be)).decide(snapshot)
+            picks[be] = (None if d is None
+                         else (d.model, d.exit_idx, d.batch_size))
+        assert len(set(picks.values())) == 1, picks
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=10, deadline=None)
+    def test_edgeserving_ignores_lattice_flag_on_every_backend(
+            self, table, seed):
+        """Regression: EdgeServingScheduler is the paper-exact greedy —
+        even constructed directly with lattice=True, switching backend for
+        speed must never change its decisions (the accelerated route used
+        to enumerate the lattice while the numpy loop ignored it)."""
+        sat = table.with_batch_saturation(4)
+        rng = np.random.default_rng(seed)
+        snapshot = random_snapshot(rng)
+        picks = set()
+        for be in CPU_BACKENDS:
+            for lattice in (False, True):
+                d = EdgeServingScheduler(sat, SchedulerConfig(
+                    slo=0.03, lattice=lattice, backend=be)).decide(snapshot)
+                picks.add(None if d is None
+                          else (d.model, d.exit_idx, d.batch_size))
+        assert len(picks) == 1, picks
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=15, deadline=None)
+    def test_property_loop_reference_matches_backends(self, table, seed):
+        # The paper-exact loop (numpy) vs the accelerated greedy paths.
+        rng = np.random.default_rng(seed)
+        snapshot = random_snapshot(rng, het_tau=bool(seed % 2))
+        d_ref = EdgeServingScheduler(
+            table, SchedulerConfig(slo=0.05)).decide(snapshot)
+        for be in ("jnp", "pallas-interpret"):
+            d = EdgeServingScheduler(
+                table, SchedulerConfig(slo=0.05, backend=be)).decide(snapshot)
+            if d_ref is None:
+                assert d is None
+            else:
+                assert (d_ref.model, d_ref.exit_idx, d_ref.batch_size) == (
+                    d.model, d.exit_idx, d.batch_size)
+
+    def test_numpy_backend_bitwise_matches_legacy_vectorized(self, table):
+        # The default backend must reproduce the historical vectorised
+        # scoring bit-for-bit: per-candidate scores are the same float ops
+        # in the same order.
+        rng = np.random.default_rng(3)
+        snapshot = random_snapshot(rng)
+        sched = VectorizedEdgeServingScheduler(table, SchedulerConfig())
+        cq, cb, _, cl, _ = sched.enumerate_candidates(snapshot)
+        scores = sched.score_candidates(snapshot, cl, cb, cq)
+        tau, clip = sched.config.slo, sched.config.clip
+        w, mask = snapshot.padded()
+        shifted = w[None, :, :] + cl[:, None, None]
+        urg = np.minimum(
+            np.exp(np.minimum(shifted / tau - 1.0, np.log(clip))), clip
+        ) * mask[None, :, :]
+        total = urg.sum(axis=(1, 2))
+        pos = np.arange(w.shape[1])[None, :]
+        served = (pos < cb[:, None]).astype(np.float32)
+        own = urg[np.arange(len(cq)), cq, :]
+        np.testing.assert_array_equal(
+            scores, total - (own * served).sum(axis=1))
+
+
+class TestHetTauScoring:
+    def test_het_tau_flips_argmin(self, table):
+        """The case the scalar-tau fast path silently got wrong: a task
+        near the *global* SLO but with a relaxed own deadline vs a fresher
+        task about to blow its tight own deadline."""
+        waits = [np.array([0.045]), np.array([0.030])]
+        deadlines = [np.array([0.5]), np.array([0.032])]
+        scalar_snap = QueueSnapshot(0.0, waits)
+        het_snap = QueueSnapshot(0.0, waits, deadlines)
+        for be in CPU_BACKENDS:
+            sched = VectorizedEdgeServingScheduler(
+                table, SchedulerConfig(slo=0.05, backend=be))
+            d_scalar = sched.decide(scalar_snap)
+            d_het = sched.decide(het_snap)
+            # scalar view: queue 0 looks most urgent; per-task deadlines
+            # reveal queue 1 is the one about to violate.
+            assert d_scalar.model == 0, be
+            assert d_het.model == 1, be
+
+    def test_kernel_het_tau_matches_ref_with_padding(self):
+        # N not a multiple of block_m (pad path) + per-task tau matrix.
+        rng = np.random.default_rng(11)
+        m, q, n, bm = 5, 33, 13, 8
+        w = jnp.asarray(np.sort(rng.uniform(0, 0.1, (m, q)))[:, ::-1].copy(),
+                        jnp.float32)
+        mask = jnp.asarray((rng.uniform(size=(m, q)) > 0.3), jnp.float32)
+        tau = jnp.asarray(rng.uniform(0.02, 0.09, (m, q)), jnp.float32)
+        lat = jnp.asarray(rng.uniform(1e-3, 2e-2, n), jnp.float32)
+        bat = jnp.asarray(rng.integers(1, q + 1, n), jnp.int32)
+        cq = jnp.asarray(rng.integers(0, m, n), jnp.int32)
+        out = stability_scores(w, mask, lat, bat, cq, tau=tau, block_m=bm,
+                               interpret=True)
+        ref = lattice_stability_scores_ref(w, mask, lat, bat, cq, tau, 10.0)
+        assert out.shape == (n,)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5)
+
+    def test_kernel_scalar_tau_bitwise_matches_filled_matrix(self):
+        # The scalar fast path is literally the filled-matrix path.
+        rng = np.random.default_rng(12)
+        m, q, n = 4, 16, 9
+        w = jnp.asarray(np.sort(rng.uniform(0, 0.1, (m, q)))[:, ::-1].copy(),
+                        jnp.float32)
+        mask = jnp.ones((m, q), jnp.float32)
+        lat = jnp.asarray(rng.uniform(1e-3, 2e-2, n), jnp.float32)
+        bat = jnp.asarray(rng.integers(1, 5, n), jnp.int32)
+        cq = jnp.asarray(rng.integers(0, m, n), jnp.int32)
+        out_scalar = stability_scores(w, mask, lat, bat, cq, tau=0.05,
+                                      interpret=True)
+        out_matrix = stability_scores(
+            w, mask, lat, bat, cq, tau=jnp.full((m, q), 0.05, jnp.float32),
+            interpret=True)
+        np.testing.assert_array_equal(np.asarray(out_scalar),
+                                      np.asarray(out_matrix))
+
+    def test_kernel_het_tau_flips_argmin(self):
+        # Same silent-wrong-answer scenario, pinned at the kernel level.
+        w = jnp.asarray([[0.045], [0.030]], jnp.float32)
+        mask = jnp.ones((2, 1), jnp.float32)
+        tau = jnp.asarray([[0.5], [0.032]], jnp.float32)
+        lat = jnp.asarray([0.005, 0.005], jnp.float32)
+        bat = jnp.asarray([1, 1], jnp.int32)
+        s_scalar = np.asarray(stability_scores(
+            w, mask, lat, bat, tau=0.05, interpret=True))
+        s_het = np.asarray(stability_scores(
+            w, mask, lat, bat, tau=tau, interpret=True))
+        assert int(np.argmin(s_scalar)) == 0
+        assert int(np.argmin(s_het)) == 1
+
+
+class TestNoRecompileAcrossTaus:
+    def test_single_compile_across_slo_and_clip_sweep(self):
+        """tau/clip are traced operands: a fig8-style SLO sweep must reuse
+        one executable instead of recompiling per deadline."""
+        rng = np.random.default_rng(13)
+        m, q = 3, 8
+        w = jnp.asarray(np.sort(rng.uniform(0, 0.1, (m, q)))[:, ::-1].copy(),
+                        jnp.float32)
+        mask = jnp.ones((m, q), jnp.float32)
+        lat = jnp.asarray(rng.uniform(1e-3, 2e-2, m), jnp.float32)
+        bat = jnp.asarray(rng.integers(1, 5, m), jnp.int32)
+        # prime the cache for this shape/arg-structure signature
+        stability_scores(w, mask, lat, bat, tau=0.019, clip=7.0,
+                         interpret=True)
+        before = stability_scores._cache_size()
+        for tau in (0.02, 0.03, 0.05, 0.07, 0.1):
+            for clip in (5.0, 10.0, 20.0):
+                out = stability_scores(w, mask, lat, bat, tau=tau, clip=clip,
+                                       interpret=True)
+                assert out.shape == (m,)
+        assert stability_scores._cache_size() == before
+
+    def test_backend_schedulers_share_jit_cache(self, table):
+        from repro.core.scoring import _jnp_score
+
+        rng = np.random.default_rng(14)
+        waits = [rng.uniform(0, 0.08, size=5)[::-1] for _ in range(3)]
+        snapshot = QueueSnapshot(0.0, [np.sort(w)[::-1] for w in waits])
+        cfgs = [SchedulerConfig(slo=s, backend="jnp")
+                for s in (0.02, 0.05, 0.08)]
+        VectorizedEdgeServingScheduler(table, cfgs[0]).decide(snapshot)
+        before = _jnp_score._cache_size()
+        for cfg in cfgs:
+            VectorizedEdgeServingScheduler(table, cfg).decide(snapshot)
+        assert _jnp_score._cache_size() == before
+
+
+class TestSharedEnumeration:
+    def test_greedy_enumeration_is_single_rung(self, table):
+        sched = VectorizedEdgeServingScheduler(table, SchedulerConfig())
+        snapshot = QueueSnapshot(
+            0.0, [np.array([0.03, 0.02, 0.01]), np.array([]),
+                  np.array([0.04])])
+        cq, cb, ce, cl, cw = sched.enumerate_candidates(snapshot)
+        assert list(cq) == [0, 2]
+        assert list(cb) == [3, 1]
+        for m, b, e, lat in zip(cq, cb, ce, cl):
+            assert lat == table(int(m), int(e), int(b))
+
+    def test_lattice_flag_upgrades_enumeration(self, table):
+        cfg = SchedulerConfig(lattice=True)
+        sched = VectorizedEdgeServingScheduler(table, cfg)
+        snapshot = QueueSnapshot(0.0, [np.array([0.03, 0.02, 0.01, 0.005]),
+                                       np.array([]), np.array([])])
+        cq, cb, _, _, _ = sched.enumerate_candidates(snapshot)
+        assert list(cq) == [0, 0, 0]
+        assert list(cb) == [4, 2, 1]
+
+    def test_backend_equivalent_through_config_replace(self, table):
+        # dataclasses.replace keeps frozen-config ergonomics working.
+        cfg = SchedulerConfig(slo=0.05)
+        cfg2 = dataclasses.replace(cfg, backend="pallas-interpret")
+        s = VectorizedEdgeServingScheduler(table, cfg2)
+        assert s.scoring.name == "pallas-interpret"

@@ -97,6 +97,64 @@ class TestLiveServing:
                 assert a2 >= b1 - 1e-9
 
 
+class TestEngineDrainCap:
+    """Regression: ``drain=True`` busy-waited forever when a policy left
+    queues non-empty while ``decide`` kept returning ``None`` past
+    ``duration`` (the simulator has ``drain_cap``; the live engine had no
+    equivalent). The engine now mirrors the simulator's cap and surfaces
+    stranded requests via ``residual_queue``."""
+
+    def _never_scheduler(self):
+        from repro.core import ProfileTable, Scheduler
+
+        class NeverScheduler(Scheduler):
+            name = "never-stub"
+
+            def decide(self, snapshot):
+                return None  # e.g. a pruning baseline that stops dispatching
+
+        return NeverScheduler(ProfileTable.paper_rtx3080(),
+                              SchedulerConfig(slo=0.05))
+
+    def test_drain_cap_bounds_the_busy_wait(self, deployment):
+        ticks = iter(np.arange(0.0, 60.0, 0.05))
+        engine = ServingEngine(deployment, self._never_scheduler(),
+                               clock=lambda: float(next(ticks)))
+        arrivals = [Request(req_id=i, model=0, arrival=0.0) for i in range(4)]
+        completions, span = engine.run(
+            arrivals, duration=0.1, drain=True, idle_sleep=0.0, drain_cap=0.5)
+        assert completions == []
+        assert span <= 1.0  # returned at the cap, not the clock's horizon
+        m = engine.metrics(engine.scheduler.table, slo=0.05, span=span)
+        assert m.residual_queue == 4
+
+    def test_unsubmitted_tail_counts_as_residual(self, deployment):
+        # An arrival beyond the cap is never ingested but must not vanish:
+        # completions + dropped + residual == arrivals (simulator parity).
+        ticks = iter(np.arange(0.0, 60.0, 0.05))
+        engine = ServingEngine(deployment, self._never_scheduler(),
+                               clock=lambda: float(next(ticks)))
+        arrivals = [Request(req_id=0, model=0, arrival=0.0),
+                    Request(req_id=1, model=0, arrival=30.0)]
+        completions, span = engine.run(
+            arrivals, duration=0.1, drain=True, idle_sleep=0.0, drain_cap=0.5)
+        assert completions == []
+        m = engine.metrics(engine.scheduler.table, slo=0.05, span=span)
+        assert m.residual_queue == 2  # 1 queued + 1 never-ingested
+
+    def test_default_cap_preserves_normal_drain(self, deployment):
+        # sanity: a working scheduler under the default cap still drains
+        table = measure_profile(deployment, batch_sizes=[1, 2],
+                                repeats=2, warmup=1)
+        sched = EdgeServingScheduler(table,
+                                     SchedulerConfig(slo=10.0, max_batch=2))
+        engine = ServingEngine(deployment, sched)
+        engine.warmup([1, 2])
+        arrivals = [Request(req_id=i, model=0, arrival=0.0) for i in range(4)]
+        completions, _ = engine.run(arrivals, duration=0.01, drain=True)
+        assert len(completions) == 4
+
+
 class TestTrainingIntegration:
     def test_loss_decreases_tiny_lm(self):
         cfg = get_config("smollm-135m", smoke=True)

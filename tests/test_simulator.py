@@ -7,6 +7,7 @@ from hypothesis import strategies as st
 
 from repro.core import (
     Completion,
+    EdgeServingScheduler,
     ProfileTable,
     Request,
     SchedulerConfig,
@@ -164,6 +165,61 @@ class TestEndToEndBehaviour:
         all_tasks = sim.run(arrivals, 3.0, warmup_tasks=0).metrics.num_completed
         post = sim.run(arrivals, 3.0, warmup_tasks=100).metrics.num_completed
         assert post == all_tasks - 100
+
+
+class TestStrictTimeProgress:
+    """Regression for the idle-branch stall: the loop advanced time with a
+    fixed ``+ 1e-12`` epsilon, which rounds to zero once the epsilon drops
+    below half a float64 ulp of ``t`` (t >= 16384 s, e.g. wall-clock-offset
+    trace replay) — against a deferring scheduler whose ``next_wake`` keeps
+    returning (sub-ulp past) the same instant, ``t`` stopped advancing and
+    the simulator looped forever. The fix is one-ulp strict progress via
+    ``np.nextafter``."""
+
+    T0 = 65536.0  # np.spacing(T0) ~ 1.5e-11 >> the old 1e-12 epsilon
+
+    def _deferring_scheduler(self, table):
+        release = self.T0 + 50 * np.spacing(self.T0)  # needs real progress
+
+        class DeferringStub(EdgeServingScheduler):
+            name = "deferring-stub"
+
+            def decide(self, snapshot):
+                if snapshot.nonempty() and snapshot.now < release:
+                    return None  # defer: forces the idle branch each round
+                return super().decide(snapshot)
+
+            def next_wake(self, snapshot):
+                if not snapshot.nonempty():
+                    return None
+                # sub-ulp slack at this magnitude: the old epsilon-advance
+                # rounds max(t, wake) + 1e-12 straight back to t.
+                return snapshot.now + 1e-13
+
+        return DeferringStub(table, SchedulerConfig(slo=0.05))
+
+    def test_deferring_wake_progresses_at_large_t(self, table):
+        sched = self._deferring_scheduler(table)
+        sim = ServingSimulator(sched, table, num_models=3)
+        arrivals = [Request(req_id=0, model=0, arrival=self.T0)]
+        res = sim.run(arrivals, horizon=self.T0 + 1.0, warmup_tasks=0)
+        assert res.metrics.num_completed == 1
+        assert res.completions[0].dispatch >= self.T0
+
+    def test_offset_trace_replay_terminates(self, table):
+        # Plain end-to-end run with a large wall-clock offset on every
+        # arrival (recorded-trace replay): must drain normally.
+        sched = make_scheduler("edgeserving", table, SchedulerConfig())
+        offset = 20000.0
+        arrivals = [
+            Request(req_id=r.req_id, model=r.model,
+                    arrival=r.arrival + offset, data_id=r.data_id)
+            for r in poisson_arrivals(paper_rate_vector(40), 1.0, seed=3)
+        ]
+        sim = ServingSimulator(sched, table, num_models=3)
+        res = sim.run(arrivals, horizon=offset + 1.0, warmup_tasks=0)
+        assert res.metrics.num_completed == len(arrivals)
+        assert res.metrics.residual_queue == 0
 
 
 class TestSummarize:
