@@ -1,0 +1,139 @@
+"""Beyond-paper Fig. 15: online profile adaptation under device drift.
+
+The paper's scheduler trusts the offline 120-cell profile table for the
+whole serving session; this study makes the *device* drift away from it
+(``repro.core.adaptive.DriftModel``: thermal-throttle ramp, DVFS step,
+contention bursts — true service times inflate while the scheduler's
+belief stays put) and compares, per drift scenario:
+
+  * **static**   — stock EdgeServing deciding with the cold-start table:
+    Eq. 6 keeps picking exits whose *believed* latency fits the SLO while
+    the true latency no longer does, and violations climb with the drift;
+  * **adaptive** — the same scheduler fed by an ``OnlineProfiler``
+    (``SweepSpec.adapt``): observed quantum service times refresh the
+    table every ``refresh_every`` seconds, Eq. 5/6 and the stability score
+    re-price themselves against the drifted device, and the violation
+    ratio recovers toward the drift-free baseline;
+  * **adaptive+safety** — adaptation plus the ``SafetyController``
+    violation-headroom feedback on the table's safety multiplier.
+
+Legs: three single-device drift scenarios (throttle / dvfs / contention)
+at the paper's near-saturation λ₁₅₂ = 140, one heterogeneous-cluster
+throttle leg (per-device profilers), and a **nodrift** control pair
+asserting that a ``drift="none"`` cell is bitwise-identical to the stock
+fig4 λ₁₅₂ = 140 cell (the drift/adapt plumbing leaves the drift-free path
+untouched). Acceptance: each scenario's ``summary`` row must read
+``adaptive_wins=yes`` (strictly lower violation ratio than static) on at
+least the throttle and dvfs legs, and the ``nodrift`` row must read
+``bitwise=yes``. ``REPRO_FIG15_SMOKE=1`` (CI) runs a single throttle
+scenario on a tiny horizon.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Tuple
+
+from repro.core import AdaptConfig, ProfileTable, SweepRunner, SweepSpec
+from benchmarks.common import HORIZON, Row, SEED, derived_str, sweep_rows
+
+LAM = 140.0            # fig4's near-saturation traffic point
+DRIFT_HORIZON = 8.0    # long enough for onset -> ramp -> adapted steady state
+SLO = 0.050
+
+# Drift scenarios: (DRIFTS name, kwargs). Onsets sit past the warmup so the
+# static and adaptive cells diverge inside the measured window.
+SCENARIOS: Dict[str, Tuple[str, Tuple[Tuple[str, object], ...]]] = {
+    "throttle": ("thermal-throttle",
+                 (("onset", 1.5), ("ramp", 2.0), ("peak", 2.2))),
+    "dvfs": ("dvfs-step", (("steps", ((2.0, 1.8),)),)),
+    "contention": ("contention",
+                   (("burst_rate", 0.3), ("burst_duration", 0.8),
+                    ("magnitude", 2.2))),
+}
+
+ADAPT = AdaptConfig(refresh_every=0.25)
+ADAPT_SAFETY = AdaptConfig(refresh_every=0.25, safety=True)
+
+
+def _specs() -> List[SweepSpec]:
+    smoke = bool(os.environ.get("REPRO_FIG15_SMOKE"))
+    # Smoke compresses the throttle into the 2 s horizon (onset inside the
+    # warmup window would hide the static/adaptive gap entirely otherwise).
+    scenarios = (
+        {"throttle": ("thermal-throttle",
+                      (("onset", 0.3), ("ramp", 0.4), ("peak", 2.2)))}
+        if smoke else SCENARIOS
+    )
+    horizon = 2.0 if smoke else DRIFT_HORIZON
+    warmup = 20 if smoke else 100
+    variants: List[Tuple[str, AdaptConfig]] = [
+        ("static", None), ("adaptive", ADAPT)]
+    if not smoke:
+        variants.append(("adaptive-safety", ADAPT_SAFETY))
+    specs = [
+        SweepSpec(policy="edgeserving", rate=LAM, seed=SEED, slo=SLO,
+                  horizon=horizon, warmup_tasks=warmup,
+                  drift=name, drift_kwargs=kwargs, adapt=adapt,
+                  label=f"fig15/{sc}/{variant}")
+        for sc, (name, kwargs) in scenarios.items()
+        for variant, adapt in variants
+    ]
+    if not smoke:
+        # Cluster leg: a 2-fast + 2-slow fleet all throttling, per-device
+        # profilers adapting each scheduler's own table.
+        name, kwargs = SCENARIOS["throttle"]
+        specs += [
+            SweepSpec(policy="edgeserving", scenario="mmpp", rate=4 * LAM,
+                      seed=SEED, slo=SLO, horizon=6.0,
+                      fleet="heterogeneous", fleet_size=4,
+                      dispatcher="stability-aware",
+                      drift=name, drift_kwargs=kwargs, adapt=adapt,
+                      label=f"fig15/cluster-throttle/{variant}")
+            for variant, adapt in (("static", None), ("adaptive", ADAPT))
+        ]
+    return specs
+
+
+def _nodrift_pair(horizon: float, warmup: int) -> List[SweepSpec]:
+    """The stock fig4 λ₁₅₂ = 140 cell, with and without the drift plumbing
+    engaged (``drift="none"``): metrics must match bitwise."""
+    common = dict(policy="edgeserving", rate=LAM, seed=SEED, slo=SLO,
+                  horizon=horizon, warmup_tasks=warmup)
+    return [
+        SweepSpec(**common, label="fig15/nodrift/fig4-cell"),
+        SweepSpec(**common, drift="none", label="fig15/nodrift/drift-none"),
+    ]
+
+
+def run() -> List[Row]:
+    smoke = bool(os.environ.get("REPRO_FIG15_SMOKE"))
+    table = ProfileTable.paper_rtx3080()
+    runner = SweepRunner(table)
+    specs = _specs() + _nodrift_pair(
+        horizon=2.0 if smoke else HORIZON, warmup=20 if smoke else 100)
+    results = sweep_rows(runner, specs)
+    rows = [row for row, _ in results]
+
+    viol = {row.name: m.violation_ratio for row, m in results}
+    # Acceptance summaries: adaptive strictly below static per scenario.
+    legs = sorted({n.split("/")[1] for n in viol if n.startswith("fig15/")
+                   and "/nodrift/" not in n})
+    for leg in legs:
+        cells = {n.rsplit("/", 1)[1]: v for n, v in viol.items()
+                 if n.startswith(f"fig15/{leg}/")}
+        if {"static", "adaptive"} <= set(cells):
+            ok = cells["adaptive"] < cells["static"]
+            extra = (f"adaptive_safety={cells['adaptive-safety']*100:.2f}%;"
+                     if "adaptive-safety" in cells else "")
+            rows.append(Row(
+                f"fig15/summary/{leg}", 0.0,
+                f"static={cells['static']*100:.2f}%;"
+                f"adaptive={cells['adaptive']*100:.2f}%;{extra}"
+                f"adaptive_wins={'yes' if ok else 'NO'}"))
+    # Drift-off control: the drift="none" cell is bitwise the stock cell.
+    pair = [m for row, m in results if row.name.startswith("fig15/nodrift/")]
+    rows.append(Row(
+        "fig15/summary/nodrift", 0.0,
+        f"{derived_str(pair[0])};bitwise={'yes' if pair[0] == pair[1] else 'NO'}"))
+    return rows

@@ -24,6 +24,7 @@ from benchmarks import (
     fig12_lattice,
     fig13_workloads,
     fig14_cluster,
+    fig15_drift,
     micro_kernels,
     micro_scheduler,
     table1_accuracy,
@@ -43,6 +44,7 @@ MODULES = {
     "fig12": fig12_lattice,
     "fig13": fig13_workloads,
     "fig14": fig14_cluster,
+    "fig15": fig15_drift,
     "micro_scheduler": micro_scheduler,
     "micro_kernels": micro_kernels,
 }

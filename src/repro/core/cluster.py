@@ -44,6 +44,12 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.adaptive import (
+    AdaptConfig,
+    DriftModel,
+    OnlineProfiler,
+    make_profiler,
+)
 from repro.core.baselines import make_scheduler
 from repro.core.metrics import DeviceMetrics, ServingMetrics, summarize
 from repro.core.profile import ProfileTable
@@ -308,12 +314,17 @@ class DeviceSpec:
                ``None`` = full replication (hosts every model).
       fail_at: optional wall-clock time (seconds) at which the device dies
                mid-run (see module docstring for the failover semantics).
+      drift:   optional per-device ground-truth drift on true service times
+               (``repro.core.adaptive.DriftModel``); re-seeded per run from
+               the cluster seed and the device id, so fleets drift
+               independently but deterministically.
     """
 
     table: ProfileTable
     name: str = ""
     models: Optional[Tuple[int, ...]] = None
     fail_at: Optional[float] = None
+    drift: Optional[DriftModel] = None
 
     def label(self, d: int) -> str:
         return self.name or self.table.meta.get("platform", f"device{d}")
@@ -342,9 +353,13 @@ FLEETS: Dict[str, Callable[[int, ProfileTable], List[DeviceSpec]]] = {
 
 
 def make_fleet(name: str, size: int, base: ProfileTable,
-               fail_at: Sequence[Tuple[int, float]] = ()) -> List[DeviceSpec]:
+               fail_at: Sequence[Tuple[int, float]] = (),
+               drift: Sequence[Tuple[int, DriftModel]] = ()) -> List[DeviceSpec]:
     """Build a named fleet of ``size`` devices from a base table;
-    ``fail_at`` is an optional ``[(device, time)]`` failure schedule."""
+    ``fail_at`` is an optional ``[(device, time)]`` failure schedule and
+    ``drift`` an optional ``[(device, DriftModel)]`` drift assignment
+    (give each device its *own* model instance — burst caches are
+    per-instance; the simulator re-seeds them per device at run start)."""
     try:
         builder = FLEETS[name]
     except KeyError:
@@ -356,6 +371,9 @@ def make_fleet(name: str, size: int, base: ProfileTable,
     for d, t in fail_at:
         assert 0 <= d < size, f"fail_at device {d} outside fleet of {size}"
         devices[d] = dataclasses.replace(devices[d], fail_at=float(t))
+    for d, dm in drift:
+        assert 0 <= d < size, f"drift device {d} outside fleet of {size}"
+        devices[d] = dataclasses.replace(devices[d], drift=dm)
     return devices
 
 
@@ -372,18 +390,20 @@ class _Device:
     __slots__ = (
         "spec", "scheduler", "table", "queues", "rng", "noise_cov",
         "completions", "busy_time", "dropped", "dispatched", "alive",
-        "pending_at", "in_quantum", "clock", "done",
+        "pending_at", "in_quantum", "clock", "done", "profiler",
     )
 
     def __init__(self, spec: DeviceSpec, scheduler: Scheduler,
                  num_models: int, rng: np.random.Generator,
-                 noise_cov: float):
+                 noise_cov: float,
+                 profiler: Optional["OnlineProfiler"] = None):
         self.spec = spec
         self.scheduler = scheduler
         self.table = spec.table
         self.queues = [ServiceQueue(m) for m in range(num_models)]
         self.rng = rng
         self.noise_cov = noise_cov
+        self.profiler = profiler  # per-device online adaptation (optional)
         self.completions: List[Completion] = []
         self.busy_time = 0.0
         self.dropped = 0
@@ -397,8 +417,10 @@ class _Device:
     def queued(self) -> int:
         return sum(len(q) for q in self.queues)
 
-    def service_time(self, m: int, e: int, batch: int) -> float:
+    def service_time(self, m: int, e: int, batch: int, t: float = 0.0) -> float:
         base = self.table(m, e, batch)
+        if self.spec.drift is not None:
+            base *= self.spec.drift.multiplier(t)
         if self.noise_cov > 0:
             base *= service_noise_multiplier(self.rng, self.noise_cov)
         return base
@@ -449,6 +471,7 @@ class ClusterSimulator(DeviceLoadView):
         service_noise_cov: float = 0.0,
         seed: int = 0,
         drain_cap: float = 600.0,
+        adapt: Optional[AdaptConfig] = None,
     ):
         assert len(devices) >= 1
         self.specs = list(devices)
@@ -459,6 +482,9 @@ class ClusterSimulator(DeviceLoadView):
         self.noise_cov = service_noise_cov
         self.seed = seed
         self.drain_cap = drain_cap
+        # Per-device online adaptation: each device's completions feed its
+        # own OnlineProfiler over its own table (None = static tables).
+        self.adapt = adapt
         # placement: model -> device ids hosting it
         self.placement: List[List[int]] = [
             [d for d, s in enumerate(self.specs)
@@ -485,9 +511,15 @@ class ClusterSimulator(DeviceLoadView):
         return self._devs[d].queued()
 
     def predicted_completion(self, d: int, model: int) -> float:
+        # Price with the device's *current belief* (its scheduler's table),
+        # not the cold-start spec table: under online adaptation the drain
+        # term already reads the refreshed table via drain_estimate, and a
+        # throttled device must advertise its learned slowdown to the
+        # dispatcher too. Without adaptation both tables are one object.
         dev = self._devs[d]
-        e_final = dev.table.num_exits - 1
-        return self.effective_backlog(d) + dev.table(model, e_final, 1)
+        belief = dev.scheduler.table
+        e_final = belief.num_exits - 1
+        return self.effective_backlog(d) + belief(model, e_final, 1)
 
     # -- event loop ------------------------------------------------------------
 
@@ -497,7 +529,11 @@ class ClusterSimulator(DeviceLoadView):
         horizon: float,
         warmup_tasks: int = 100,
     ) -> ClusterResult:
-        # fresh per-run state (devices, dispatcher, rngs): run() is rerunnable
+        # fresh per-run state (devices, dispatcher, rngs, drift, profilers):
+        # run() is rerunnable
+        for d, spec in enumerate(self.specs):
+            if spec.drift is not None:
+                spec.drift.reset((self.seed + 7919 * d) ^ 0xD21F)
         self._devs = [
             _Device(
                 spec,
@@ -505,6 +541,7 @@ class ClusterSimulator(DeviceLoadView):
                 self.num_models,
                 np.random.default_rng((self.seed + 7919 * d) ^ 0x5EED),
                 self.noise_cov,
+                profiler=make_profiler(spec.table, self.adapt),
             )
             for d, spec in enumerate(self.specs)
         ]
@@ -631,8 +668,12 @@ class ClusterSimulator(DeviceLoadView):
         snapshot = QueueSnapshot.take(dev.queues, t)
         shed = dev.scheduler.prune(snapshot)
         if shed:
+            n_shed = 0
             for m, n in shed:
-                dev.dropped += len(dev.queues[m].pop_batch(n))
+                n_shed += len(dev.queues[m].pop_batch(n))
+            dev.dropped += n_shed
+            if dev.profiler is not None:
+                dev.profiler.observe_dropped(n_shed)
             snapshot = QueueSnapshot.take(dev.queues, t)
         decision = dev.scheduler.decide(snapshot)
         if decision is None:
@@ -644,7 +685,7 @@ class ClusterSimulator(DeviceLoadView):
                     dev.pending_at = np.nextafter(max(t, wake), np.inf)
             return
         service = dev.service_time(decision.model, decision.exit_idx,
-                                   decision.batch_size)
+                                   decision.batch_size, t)
         batch = dev.queues[decision.model].pop_batch(decision.batch_size)
         assert len(batch) == decision.batch_size, "scheduler overdrew queue"
         t_end = t + service
@@ -660,6 +701,12 @@ class ClusterSimulator(DeviceLoadView):
                 batch_size=decision.batch_size,
                 deadline=req.deadline,
             ))
+        if dev.profiler is not None:
+            refreshed = dev.profiler.ingest_quantum(
+                decision.model, decision.exit_idx, decision.batch_size,
+                service, t_end, batch, self.config.slo)
+            if refreshed is not None:
+                dev.scheduler.table = refreshed
         dev.pending_at = t_end
         dev.in_quantum = True
 

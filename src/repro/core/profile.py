@@ -103,7 +103,15 @@ class ProfileTable:
         )
 
     def with_safety(self, multiplier: float) -> "ProfileTable":
-        """Apply a P95-style safety multiplier (TPU-analytic tables)."""
+        """A copy with every latency inflated by a safety ``multiplier``.
+
+        The static headroom knob of the offline phase (paper Sec. IV-B
+        records P95 for the same reason): analytic tables
+        (``from_roofline``) and mean-based estimates use it to absorb
+        measurement optimism. The *adaptive* twin is
+        ``repro.core.adaptive.SafetyController``, which tunes this
+        multiplier online from observed violation headroom.
+        """
         return dataclasses.replace(self, latency=self.latency * multiplier)
 
     def with_batch_saturation(self, knee: int, slope: float = 0.85) -> "ProfileTable":
@@ -200,7 +208,12 @@ class ProfileTable:
         ``run_fn`` must execute one full inference for configuration
         ``(m, e, B)`` and block until complete (jax: ``block_until_ready``).
         Records the ``percentile`` latency over ``repeats`` runs after
-        ``warmup`` discarded runs, exactly like the paper's profiler.
+        ``warmup`` discarded runs, exactly like the paper's profiler; batch
+        monotonicity is re-enforced against measurement noise
+        (``np.maximum.accumulate``). The resulting table is a point-in-time
+        snapshot of the device — under thermal/DVFS/contention drift it is
+        the *cold start* that ``repro.core.adaptive.OnlineProfiler``
+        refreshes from observed completions.
         """
         m_n, e_n, b_n = len(model_names), len(exit_names), len(batch_sizes)
         lat = np.zeros((m_n, e_n, b_n), dtype=np.float64)

@@ -22,6 +22,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.adaptive import AdaptConfig, DriftModel, make_profiler
 from repro.core.metrics import ServingMetrics, summarize
 from repro.core.profile import ProfileTable
 from repro.core.queues import QueueSnapshot, ServiceQueue
@@ -36,6 +37,7 @@ class SimResult:
     completions: List[Completion]
     traces: List[ServingTrace]
     span: float
+    adapted_table: Optional[ProfileTable] = None  # final online-profiler view
 
 
 def service_noise_multiplier(rng: np.random.Generator, cov: float) -> float:
@@ -58,6 +60,8 @@ class ServingSimulator:
         model_map: Optional[Sequence[int]] = None,
         seed: int = 0,
         drain_cap: float = 600.0,
+        drift: Optional[DriftModel] = None,
+        adapt: Optional[AdaptConfig] = None,
     ):
         """Args:
           scheduler: the policy under test (its table may be a restricted
@@ -67,6 +71,13 @@ class ServingSimulator:
             (paper measures CoV < 3%; 0 = fully deterministic).
           model_map: queue index -> execution-table row (deployment mixes).
           drain_cap: hard wall-clock cap on post-horizon draining.
+          drift: optional ground-truth drift on *true* service times
+            (``repro.core.adaptive``); the scheduler's table is untouched,
+            so it decides with stale estimates unless ``adapt`` is on.
+          adapt: optional online-adaptation config: observed quantum
+            service times feed an ``OnlineProfiler`` over the scheduler's
+            table, which is swapped for a refreshed view on the configured
+            cadence. ``None`` for both knobs is bitwise the stock simulator.
         """
         self.scheduler = scheduler
         self.table = table
@@ -75,12 +86,17 @@ class ServingSimulator:
         self.model_map = list(model_map) if model_map is not None else None
         self.rng = np.random.default_rng(seed ^ 0x5EED)
         self.drain_cap = drain_cap
+        self.drift = drift
+        self.adapt = adapt
+        self._seed = seed
 
     def _exec_row(self, m: int) -> int:
         return self.model_map[m] if self.model_map is not None else m
 
-    def _service_time(self, m: int, e: int, batch: int) -> float:
+    def _service_time(self, m: int, e: int, batch: int, t: float = 0.0) -> float:
         base = self.table(self._exec_row(m), e, batch)
+        if self.drift is not None:
+            base *= self.drift.multiplier(t)
         if self.noise_cov > 0:
             base *= service_noise_multiplier(self.rng, self.noise_cov)
         return base
@@ -100,6 +116,17 @@ class ServingSimulator:
         t = 0.0
         next_arrival = 0  # index into the time-sorted arrival list
         n_arr = len(arrivals)
+        # Drift is re-seeded per run (not per construction): a model shared
+        # across simulators cannot cross-contaminate their streams, and
+        # run() stays deterministic under reruns.
+        if self.drift is not None:
+            self.drift.reset(self._seed ^ 0xD21F)
+        # Online adaptation: the profiler adapts the *scheduler's* belief
+        # (which may be a restricted view); the execution table stays the
+        # ground truth. The original belief is restored on exit so run()
+        # stays rerunnable / sweep cells hermetic.
+        profiler = make_profiler(self.scheduler.table, self.adapt)
+        static_table = self.scheduler.table
 
         def ingest(upto: float) -> int:
             nonlocal next_arrival
@@ -114,8 +141,12 @@ class ServingSimulator:
             snapshot = QueueSnapshot.take(queues, t)
             shed = self.scheduler.prune(snapshot)
             if shed:
+                n_shed = 0
                 for m, n in shed:
-                    dropped += len(queues[m].pop_batch(n))
+                    n_shed += len(queues[m].pop_batch(n))
+                dropped += n_shed
+                if profiler is not None:
+                    profiler.observe_dropped(n_shed)
                 snapshot = QueueSnapshot.take(queues, t)
             decision = self.scheduler.decide(snapshot)
 
@@ -140,7 +171,7 @@ class ServingSimulator:
                 continue
 
             service = self._service_time(decision.model, decision.exit_idx,
-                                         decision.batch_size)
+                                         decision.batch_size, t)
             batch = queues[decision.model].pop_batch(decision.batch_size)
             assert len(batch) == decision.batch_size, "scheduler overdrew queue"
             t_end = t + service
@@ -158,6 +189,12 @@ class ServingSimulator:
                         deadline=req.deadline,
                     )
                 )
+            if profiler is not None:
+                refreshed = profiler.ingest_quantum(
+                    decision.model, decision.exit_idx, decision.batch_size,
+                    service, t_end, batch, self.scheduler.config.slo)
+                if refreshed is not None:
+                    self.scheduler.table = refreshed
             if keep_traces:
                 traces.append(
                     ServingTrace(t, t_end, decision, tuple(snapshot.qlens()))
@@ -166,6 +203,10 @@ class ServingSimulator:
             if t > horizon + self.drain_cap:
                 break
 
+        adapted = None
+        if profiler is not None:
+            adapted = profiler.materialize()
+            self.scheduler.table = static_table  # hermetic: rerunnable cell
         residual = sum(len(q) for q in queues) + (n_arr - next_arrival)
         span = max(t, horizon)
         metrics = summarize(
@@ -179,7 +220,8 @@ class ServingSimulator:
             model_map=self.model_map,
             dropped=dropped,
         )
-        return SimResult(metrics, completions, traces, span)
+        return SimResult(metrics, completions, traces, span,
+                         adapted_table=adapted)
 
 
 def run_experiment(
@@ -193,11 +235,15 @@ def run_experiment(
     model_map: Optional[Sequence[int]] = None,
     keep_traces: bool = False,
     process: Optional[object] = None,
+    drift: Optional[DriftModel] = None,
+    adapt: Optional[AdaptConfig] = None,
 ) -> SimResult:
     """One full serving experiment: arrivals -> simulate -> metrics.
 
     ``process`` is an optional ``repro.core.workloads.ArrivalProcess``; the
     default is the paper's stationary Poisson traffic at ``rates``.
+    ``drift`` / ``adapt`` thread straight into :class:`ServingSimulator`
+    (device drift on true service times / online profile adaptation).
     """
     if process is not None:
         arrivals = process.generate(horizon, seed=seed)
@@ -210,6 +256,8 @@ def run_experiment(
         service_noise_cov=service_noise_cov,
         model_map=model_map,
         seed=seed,
+        drift=drift,
+        adapt=adapt,
     )
     return sim.run(arrivals, horizon, warmup_tasks=warmup_tasks,
                    keep_traces=keep_traces)

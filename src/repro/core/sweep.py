@@ -37,6 +37,7 @@ import os
 import time
 from typing import List, Optional, Sequence, Tuple
 
+from repro.core.adaptive import AdaptConfig, make_drift
 from repro.core.baselines import make_scheduler
 from repro.core.cluster import ClusterSimulator, make_dispatcher, make_fleet
 from repro.core.metrics import ServingMetrics
@@ -71,6 +72,14 @@ class SweepSpec:
     ``((device, time), ...)`` failure schedule. All fields stay hashable /
     picklable, so cluster grids fan across workers with the same
     parallel ≡ serial bitwise guarantee.
+
+    Drift / adaptation (``repro.core.adaptive``): ``drift`` names a
+    ``DRIFTS`` model (or ``"none"``) applied to true service times —
+    every device of a cluster cell gets its own instance, independently
+    re-seeded — with ``drift_kwargs`` as hashable (key, value) pairs;
+    ``adapt`` is an optional :class:`AdaptConfig` switching the cell's
+    scheduler(s) from the static cold-start table to online-profiled
+    refreshes. Both default to off, which is bitwise the stock cell.
     """
 
     policy: str
@@ -90,6 +99,9 @@ class SweepSpec:
     dispatcher: str = "least-loaded"
     fail_at: Tuple[Tuple[int, float], ...] = ()
     backend: str = "numpy"
+    drift: Optional[str] = None          # DRIFTS name; None/"none" = stock
+    drift_kwargs: Tuple[Tuple[str, object], ...] = ()
+    adapt: Optional[AdaptConfig] = None  # None = static scheduler table
 
     def rate_vector(self) -> List[float]:
         if self.rates is not None:
@@ -103,6 +115,10 @@ class SweepSpec:
         if self.backend != "numpy":
             policy = f"{policy}[{self.backend}]"
         base = f"{policy}/{self.scenario}/lam{self.rate:g}/seed{self.seed}"
+        if self.drift is not None and self.drift != "none":
+            base = f"{base}/drift-{self.drift}"
+        if self.adapt is not None:
+            base = f"{base}/adapt"
         if self.fleet is not None:
             base = f"{self.dispatcher}/{self.fleet}x{self.fleet_size}/{base}"
         return base
@@ -210,15 +226,22 @@ class SweepRunner:
                     "fleet-less spec or encode the view in the fleet's "
                     "DeviceSpecs via ClusterSimulator directly"
                 )
+            # One drift instance per device (burst caches are per-instance);
+            # ClusterSimulator re-seeds each from (seed, device id).
+            fleet_drift = tuple(
+                (d, make_drift(spec.drift, **dict(spec.drift_kwargs)))
+                for d in range(spec.fleet_size)
+            ) if spec.drift not in (None, "none") else ()
             sim = ClusterSimulator(
                 make_fleet(spec.fleet, spec.fleet_size, self.table,
-                           fail_at=spec.fail_at),
+                           fail_at=spec.fail_at, drift=fleet_drift),
                 policy=spec.policy,
                 config=cfg,
                 dispatcher=make_dispatcher(spec.dispatcher, slo=spec.slo),
                 num_models=len(rates),
                 service_noise_cov=self.service_noise_cov,
                 seed=spec.seed,
+                adapt=spec.adapt,
             )
             res = sim.run(arrivals, spec.horizon,
                           warmup_tasks=spec.warmup_tasks)
@@ -239,6 +262,8 @@ class SweepRunner:
                 service_noise_cov=self.service_noise_cov,
                 model_map=self.model_map,
                 seed=spec.seed,
+                drift=make_drift(spec.drift, **dict(spec.drift_kwargs)),
+                adapt=spec.adapt,
             )
             res = single.run(arrivals, spec.horizon,
                              warmup_tasks=spec.warmup_tasks)

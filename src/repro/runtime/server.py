@@ -8,7 +8,12 @@ profile table.
 
 Offline phase  = ``measure_profile`` (wall-clock profile of every
 (m, e, B) — one compiled executable per cell, exactly the paper's 120-cell
-table), then ``ServingEngine.run`` is the online phase.
+table), then ``ServingEngine.run`` is the online phase. With an
+``OnlineProfiler`` attached (``repro.core.adaptive``), the offline table is
+only the *cold start*: measured wall-clock service times feed back into
+refreshed scheduler tables while serving, tracking device drift (thermal
+throttling, DVFS, contention) the offline profile cannot see. Semantics and
+usage: docs/runtime.md.
 """
 
 from __future__ import annotations
@@ -21,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.adaptive import OnlineProfiler
 from repro.core.metrics import summarize
 from repro.core.profile import ProfileTable
 from repro.core.queues import QueueSnapshot, ServiceQueue
@@ -30,8 +36,18 @@ from repro.core.scheduler import Scheduler
 
 @dataclasses.dataclass
 class ServedModel:
-    """One deployed early-exit model: forward_fn(values, data, exit_idx) ->
-    outputs; data_fn(batch_size) -> input payload batch."""
+    """One deployed early-exit model behind its FIFO queue (paper Sec. III).
+
+    Attributes:
+      name:       display/profile-row name (e.g. ``"resnet50"``).
+      values:     model parameters (pytree) passed to ``forward_fn``.
+      forward_fn: ``(values, data, exit_idx) -> outputs`` — one full
+                  inference truncated at exit ``exit_idx`` (jit-able; the
+                  engine compiles one executable per (m, e, B) cell).
+      data_fn:    ``(batch_size) -> input payload batch`` for profiling and
+                  serving quanta.
+      num_exits:  number of early-exit heads, shallowest -> deepest.
+    """
 
     name: str
     values: Any
@@ -49,7 +65,16 @@ def measure_profile(
     warmup: int = 2,
     percentile: float = 95.0,
 ) -> ProfileTable:
-    """Offline profiling phase (paper Sec. IV-B) against the live device."""
+    """Offline profiling phase (paper Sec. IV-B) against the live device.
+
+    Compiles one executable per (m, e, B) cell and records the
+    ``percentile`` wall-clock latency over ``repeats`` runs after ``warmup``
+    discarded runs (``ProfileTable.measure`` underneath) — the paper's
+    120-cell table, measured rather than calibrated. The result is the
+    scheduler's *cold-start* belief; attach an
+    ``repro.core.adaptive.OnlineProfiler`` to :class:`ServingEngine` to keep
+    it tracking the device online (docs/runtime.md "Online adaptation").
+    """
     compiled: Dict[Tuple[int, int, int], Callable] = {}
 
     def run_fn(m: int, e: int, b: int):
@@ -78,17 +103,28 @@ def measure_profile(
 
 
 class ServingEngine:
-    """Online serving loop (paper Sec. III "Online Serving Phase")."""
+    """Online serving loop (paper Sec. III "Online Serving Phase").
+
+    The same snapshot -> prune -> decide -> occupy round as the simulator,
+    but each quantum executes a jitted forward on the device and service
+    time is whatever the wall clock says. ``profiler`` (optional) is an
+    ``repro.core.adaptive.OnlineProfiler``: every quantum's measured
+    service time is folded into it and the scheduler's table is swapped for
+    its refreshed view on the profiler's cadence — online profile
+    adaptation over the ``measure_profile`` cold start (docs/runtime.md).
+    """
 
     def __init__(
         self,
         models: Sequence[ServedModel],
         scheduler: Scheduler,
         clock: Callable[[], float] = time.monotonic,
+        profiler: Optional[OnlineProfiler] = None,
     ):
         self.models = list(models)
         self.scheduler = scheduler
         self.clock = clock
+        self.profiler = profiler
         self.queues = [ServiceQueue(m) for m in range(len(models))]
         self.completions: List[Completion] = []
         self.dropped = 0
@@ -99,6 +135,8 @@ class ServingEngine:
     # -- ingress ---------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        """Enqueue one request (paper: arrivals are never gated on
+        accelerator state; they become visible at the next round)."""
         self.queues[req.model].push(req)
 
     # -- execution ---------------------------------------------------------------
@@ -153,6 +191,10 @@ class ServingEngine:
         ``decide`` keeps returning ``None`` (e.g. a pruning baseline that
         sheds nothing further but never dispatches). Requests stranded at
         the cap stay queued and are surfaced via ``metrics().residual_queue``.
+
+        With a ``profiler`` attached, each quantum's measured wall-clock
+        service feeds ``OnlineProfiler.observe`` and the scheduler's table
+        is refreshed in place on the profiler's cadence.
         """
         t0 = self.clock()
         next_arr = 0
@@ -174,7 +216,10 @@ class ServingEngine:
                     break
             snapshot = QueueSnapshot.take(self.queues, now)
             for m, cnt in self.scheduler.prune(snapshot):
-                self.dropped += len(self.queues[m].pop_batch(cnt))
+                n_shed = len(self.queues[m].pop_batch(cnt))
+                self.dropped += n_shed
+                if self.profiler is not None:
+                    self.profiler.observe_dropped(n_shed)
             decision = self.scheduler.decide(snapshot)
             if decision is None:
                 time.sleep(idle_sleep)
@@ -193,10 +238,21 @@ class ServingEngine:
                     batch_size=decision.batch_size,
                     deadline=req.deadline,
                 ))
+            if self.profiler is not None:
+                refreshed = self.profiler.ingest_quantum(
+                    decision.model, decision.exit_idx, decision.batch_size,
+                    t_done - t_dispatch, t_done, batch,
+                    self.scheduler.config.slo)
+                if refreshed is not None:
+                    self.scheduler.table = refreshed
         return self.completions, self.clock() - t0
 
     def metrics(self, table: ProfileTable, slo: float, span: float,
                 warmup_tasks: int = 0):
+        """Aggregate the completion log (paper Sec. VI metrics): the shared
+        ``repro.core.metrics.summarize`` over live completions, with queued
+        + never-ingested requests surfaced as ``residual_queue`` so
+        completions + dropped + residual always equals the arrival count."""
         return summarize(
             self.completions, table, slo, warmup_tasks=warmup_tasks,
             busy_time=self._busy_s, span=span,

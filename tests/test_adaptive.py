@@ -1,0 +1,455 @@
+"""Online profile adaptation (``repro.core.adaptive``): estimator
+correctness vs numpy, seed-determinism of every DriftModel, drift-off ≡
+stock bitwise, and the adaptive-beats-static regression under a throttle
+ramp."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdaptConfig,
+    ClusterSimulator,
+    ContentionDrift,
+    DVFSStepDrift,
+    OnlineProfiler,
+    ProfileTable,
+    SafetyController,
+    SchedulerConfig,
+    ServingSimulator,
+    SweepRunner,
+    SweepSpec,
+    ThermalThrottleDrift,
+    make_drift,
+    make_fleet,
+    make_scheduler,
+)
+from repro.core.traffic import poisson_arrivals
+
+
+@pytest.fixture(scope="module")
+def table():
+    return ProfileTable.paper_rtx3080()
+
+
+def trace(lam=140.0, horizon=3.0, seed=7):
+    return poisson_arrivals([3 * lam / 1.4, 2 * lam / 1.4, lam], horizon,
+                            seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Streaming estimators vs numpy
+# ---------------------------------------------------------------------------
+
+
+class TestEstimators:
+    def test_ewma_matches_numpy_closed_form(self, table):
+        alpha = 0.3
+        prof = OnlineProfiler(table, AdaptConfig(alpha=alpha, window=16))
+        rng = np.random.default_rng(0)
+        xs = rng.uniform(1e-3, 5e-3, size=40)
+        for i, x in enumerate(xs):
+            prof.observe(0, 1, 4, float(x), now=float(i))
+        # closed form: mu_n = (1-a)^(n-1) x_0 + a * sum_i (1-a)^(n-1-i) x_i
+        n = len(xs)
+        weights = alpha * (1 - alpha) ** (n - 1 - np.arange(n))
+        weights[0] = (1 - alpha) ** (n - 1)
+        expected = float(np.sum(weights * xs))
+        count, ewma, _ = prof.cell_stats(0, 1, 4)
+        assert count == n
+        assert ewma == pytest.approx(expected, rel=1e-12)
+
+    def test_streaming_p95_matches_numpy_window(self, table):
+        window = 16
+        prof = OnlineProfiler(table, AdaptConfig(window=window))
+        rng = np.random.default_rng(1)
+        xs = rng.uniform(1e-3, 9e-3, size=50)
+        for i, x in enumerate(xs):
+            prof.observe(2, 0, 1, float(x), now=float(i))
+        _, _, p95 = prof.cell_stats(2, 0, 1)
+        assert p95 == pytest.approx(np.percentile(xs[-window:], 95.0))
+
+    def test_unobserved_cell_reports_zero(self, table):
+        prof = OnlineProfiler(table, AdaptConfig())
+        assert prof.cell_stats(1, 1, 1) == (0, 0.0, 0.0)
+        assert prof.num_observations == 0
+        assert prof.drift_ratio == 1.0
+
+    def test_batch_maps_to_grid_cell(self, table):
+        # batch 3 on the 1..10 grid lands in the batch-size-3 column
+        prof = OnlineProfiler(table, AdaptConfig())
+        prof.observe(0, 0, 3, 2e-3, now=0.0)
+        assert prof.cell_stats(0, 0, 3)[0] == 1
+        assert prof._count[0, 0, 2] == 1
+
+
+# ---------------------------------------------------------------------------
+# Drift models: seed determinism
+# ---------------------------------------------------------------------------
+
+
+class TestDriftModels:
+    def test_thermal_throttle_ramp(self):
+        d = ThermalThrottleDrift(onset=1.0, ramp=2.0, peak=3.0)
+        assert d.multiplier(0.0) == 1.0
+        assert d.multiplier(1.0) == 1.0
+        assert d.multiplier(2.0) == pytest.approx(2.0)
+        assert d.multiplier(3.0) == pytest.approx(3.0)
+        assert d.multiplier(100.0) == 3.0
+
+    def test_dvfs_steps_piecewise_constant(self):
+        d = DVFSStepDrift(steps=((2.0, 1.5), (4.0, 1.2)))
+        assert d.multiplier(1.9) == 1.0
+        assert d.multiplier(2.0) == 1.5
+        assert d.multiplier(3.9) == 1.5
+        assert d.multiplier(5.0) == 1.2
+
+    def test_contention_seed_deterministic(self):
+        ts = np.linspace(0.0, 30.0, 301)
+        a = ContentionDrift(seed=3)
+        b = ContentionDrift(seed=3)
+        c = ContentionDrift(seed=4)
+        ma = [a.multiplier(t) for t in ts]
+        mb = [b.multiplier(t) for t in ts]
+        mc = [c.multiplier(t) for t in ts]
+        assert ma == mb
+        assert ma != mc  # different seed, different burst windows
+        assert set(ma) <= {1.0, a.magnitude} and a.magnitude in ma
+
+    def test_contention_query_order_independent(self):
+        ts = np.linspace(0.0, 20.0, 101)
+        fwd = ContentionDrift(seed=9)
+        scrambled = ContentionDrift(seed=9)
+        order = np.random.default_rng(0).permutation(len(ts))
+        got = {}
+        for i in order:
+            got[i] = scrambled.multiplier(ts[i])
+        assert [got[i] for i in range(len(ts))] == [
+            fwd.multiplier(t) for t in ts]
+
+    def test_reset_reproduces_stream(self):
+        d = ContentionDrift(seed=0)
+        first = [d.multiplier(t) for t in np.linspace(0, 10, 50)]
+        d.reset(0)
+        assert [d.multiplier(t) for t in np.linspace(0, 10, 50)] == first
+
+    def test_make_drift_factory(self):
+        assert make_drift(None) is None
+        assert make_drift("none") is None
+        assert isinstance(make_drift("thermal-throttle"), ThermalThrottleDrift)
+        with pytest.raises(ValueError, match="unknown drift"):
+            make_drift("microwave")
+        with pytest.raises(AssertionError):
+            make_drift(None, peak=2.0)  # kwargs without a model
+
+
+# ---------------------------------------------------------------------------
+# Safety controller
+# ---------------------------------------------------------------------------
+
+
+class TestSafetyController:
+    def test_rises_under_violations_and_caps(self):
+        c = SafetyController(target=0.01, max_mult=1.4)
+        for _ in range(400):
+            c.observe(latency=0.08, deadline=0.05)  # all late
+        assert c.multiplier == pytest.approx(1.4)
+        assert c.violation_ewma > 0.9
+
+    def test_decays_when_headroom_is_ample(self):
+        c = SafetyController(target=0.01)
+        for _ in range(200):
+            c.observe(latency=0.08, deadline=0.05)
+        inflated = c.multiplier
+        assert inflated > 1.0
+        for _ in range(2000):
+            c.observe(latency=0.01, deadline=0.05)  # all on time
+        assert c.multiplier < inflated
+        assert c.multiplier >= c.min_mult
+
+    def test_deterministic_fold(self):
+        a, b = SafetyController(), SafetyController()
+        stream = [(0.06, 0.05), (0.01, 0.05), (0.09, 0.05)] * 50
+        for lat, dl in stream:
+            a.observe(lat, dl)
+            b.observe(lat, dl)
+        assert a.multiplier == b.multiplier
+        assert a.violation_ewma == b.violation_ewma
+
+    def test_dropped_requests_count_as_violations(self, table):
+        # summarize() counts every shed request as a violation; the
+        # controller's stream must agree, or it decays the multiplier
+        # exactly while an overload burst is being shed.
+        prof = OnlineProfiler(table, AdaptConfig(safety=True))
+        for _ in range(50):
+            prof.observe_latency(0.01, 0.05)  # on-time completions
+        assert prof.safety.multiplier == prof.safety.min_mult
+        prof.observe_dropped(100)
+        assert prof.safety.violation_ewma > 0.9
+        assert prof.safety.multiplier > prof.safety.min_mult
+
+
+# ---------------------------------------------------------------------------
+# Materialisation and refresh cadence
+# ---------------------------------------------------------------------------
+
+
+class TestMaterialize:
+    def test_propagates_global_drift_ratio_to_unobserved_cells(self, table):
+        prof = OnlineProfiler(table, AdaptConfig(alpha=1.0, min_samples=1,
+                                                 mode="mean"))
+        # one cell observed at exactly 2x its cold-start value
+        base = float(table.latency[0, 3, 9])
+        prof.observe(0, 3, 10, 2.0 * base, now=0.0)
+        out = prof.materialize()
+        assert prof.drift_ratio == pytest.approx(2.0)
+        # unobserved cells scaled by the global ratio
+        np.testing.assert_allclose(out.latency[1], 2.0 * table.latency[1])
+        assert out.meta["builder"] == "online"
+
+    def test_observed_cells_use_estimate_and_stay_monotone(self, table):
+        prof = OnlineProfiler(table, AdaptConfig(min_samples=1,
+                                                 propagate=False))
+        # implausibly small observation at B=10 would break monotonicity;
+        # materialize must re-enforce it like ProfileTable.measure
+        for _ in range(3):
+            prof.observe(1, 2, 10, 1e-6, now=0.0)
+        out = prof.materialize()
+        assert np.all(np.diff(out.latency, axis=2) >= -1e-12)
+
+    def test_p95_vs_mean_mode(self, table):
+        samples = list(np.random.default_rng(2).uniform(1e-3, 9e-3, 20))
+        for mode in ("p95", "mean"):
+            prof = OnlineProfiler(
+                table, AdaptConfig(mode=mode, min_samples=1, alpha=0.5,
+                                   propagate=False))
+            for x in samples:
+                prof.observe(0, 0, 1, float(x), now=0.0)
+            _, ewma, p95 = prof.cell_stats(0, 0, 1)
+            expected = p95 if mode == "p95" else ewma
+            assert float(prof.materialize().latency[0, 0, 0]) == pytest.approx(
+                expected), mode
+
+    def test_safety_multiplier_applied_last(self, table):
+        prof = OnlineProfiler(table, AdaptConfig(safety=True, propagate=False))
+        for _ in range(100):
+            prof.observe_latency(0.09, 0.05)  # drive the controller up
+        mult = prof.safety.multiplier
+        assert mult > 1.0
+        np.testing.assert_allclose(prof.materialize().latency,
+                                   table.latency * mult)
+
+    def test_refresh_cadence(self, table):
+        prof = OnlineProfiler(table, AdaptConfig(refresh_every=1.0))
+        assert prof.maybe_refresh(5.0) is None  # nothing observed yet
+        prof.observe(0, 0, 1, 2e-3, now=0.1)
+        assert prof.maybe_refresh(0.5) is None  # cadence not reached
+        assert prof.maybe_refresh(1.5) is not None
+        assert prof.maybe_refresh(2.9) is None  # not dirty again yet
+        prof.observe(0, 0, 1, 2e-3, now=3.0)
+        assert prof.maybe_refresh(3.1) is not None
+
+
+# ---------------------------------------------------------------------------
+# Simulator integration: drift-off bitwise, adaptive-beats-static regression
+# ---------------------------------------------------------------------------
+
+
+class TestSimulatorIntegration:
+    def test_identity_drift_bitwise_stock(self, table):
+        arrivals = trace()
+        cfg = SchedulerConfig()
+
+        def run(drift):
+            sched = make_scheduler("edgeserving", table, cfg)
+            sim = ServingSimulator(sched, table, num_models=3, seed=7,
+                                   drift=drift)
+            return sim.run(list(arrivals), 3.0, warmup_tasks=50)
+
+        stock = run(None)
+        ident = run(ThermalThrottleDrift(peak=1.0))  # multiplier ≡ 1.0
+        assert ident.completions == stock.completions
+        assert ident.metrics == stock.metrics
+
+    def test_drift_none_spec_bitwise_stock_cell(self, table):
+        runner = SweepRunner(table)
+        common = dict(policy="edgeserving", rate=140.0, horizon=1.5,
+                      warmup_tasks=20)
+        stock = runner.run_cell(SweepSpec(**common))
+        none = runner.run_cell(SweepSpec(**common, drift="none"))
+        assert none.metrics == stock.metrics
+
+    def test_adaptive_strictly_beats_static_under_throttle(self, table):
+        arrivals = trace(horizon=4.0)
+        cfg = SchedulerConfig()
+
+        def run(adapt):
+            sched = make_scheduler("edgeserving", table, cfg)
+            sim = ServingSimulator(
+                sched, table, num_models=3, seed=7,
+                drift=ThermalThrottleDrift(onset=0.5, ramp=1.0, peak=2.2),
+                adapt=adapt)
+            return sim.run(list(arrivals), 4.0, warmup_tasks=50)
+
+        static = run(None)
+        adaptive = run(AdaptConfig(refresh_every=0.25))
+        assert static.metrics.violation_ratio > 0.02  # drift really hurts
+        assert (adaptive.metrics.violation_ratio
+                < static.metrics.violation_ratio)
+        assert adaptive.adapted_table is not None
+        # the learned global ratio tracks the true 2.2x throttle
+        assert adaptive.adapted_table.meta["drift_ratio"] == pytest.approx(
+            2.2, rel=0.1)
+
+    def test_shared_drift_instance_not_cross_contaminated(self, table):
+        # Drift is re-seeded at run() start, so an instance shared across
+        # simulators (or a run interleaved with another construction)
+        # still produces the stream its own seed dictates.
+        arrivals = trace(horizon=2.0)
+        dm = ContentionDrift(magnitude=2.0)
+
+        def run(drift, seed):
+            sched = make_scheduler("edgeserving", table, SchedulerConfig())
+            sim = ServingSimulator(sched, table, num_models=3, seed=seed,
+                                   drift=drift)
+            return sim.run(list(arrivals), 2.0, warmup_tasks=20)
+
+        solo = run(ContentionDrift(magnitude=2.0), seed=7)
+        # constructing a second simulator around the same instance must not
+        # disturb the first simulator's run
+        ServingSimulator(make_scheduler("edgeserving", table,
+                                        SchedulerConfig()),
+                         table, num_models=3, seed=99, drift=dm)
+        shared = run(dm, seed=7)
+        assert shared.metrics == solo.metrics
+
+    def test_adapt_run_is_hermetic_and_rerunnable(self, table):
+        arrivals = trace(horizon=2.0)
+        sched = make_scheduler("edgeserving", table, SchedulerConfig())
+        sim = ServingSimulator(
+            sched, table, num_models=3, seed=7,
+            drift=ThermalThrottleDrift(onset=0.3, ramp=0.5, peak=2.0),
+            adapt=AdaptConfig())
+        a = sim.run(list(arrivals), 2.0, warmup_tasks=20)
+        assert sched.table is table  # belief restored after the run
+        b = sim.run(list(arrivals), 2.0, warmup_tasks=20)
+        assert a.metrics == b.metrics
+
+
+# ---------------------------------------------------------------------------
+# Live engine feedback loop
+# ---------------------------------------------------------------------------
+
+
+class TestServingEngineAdaptation:
+    @pytest.fixture()
+    def engine_parts(self, table):
+        from repro.core import Request
+        from repro.runtime.server import ServedModel, ServingEngine
+
+        view = table.select_models([0]).restrict_exits([0, 3])
+        mod = ServedModel("m0", values=None,
+                          forward_fn=lambda v, x, e: np.sum(x),
+                          data_fn=lambda b: np.ones((b, 2)), num_exits=2)
+        return Request, ServedModel, ServingEngine, view, mod
+
+    def test_profiler_feeds_and_refreshes(self, engine_parts, table):
+        Request, _, ServingEngine, view, mod = engine_parts
+
+        class StepClock:
+            """Deterministic clock: each read advances 1 ms."""
+
+            def __init__(self):
+                self.t = 0.0
+
+            def __call__(self):
+                self.t += 1e-3
+                return self.t
+
+        sched = make_scheduler("edgeserving", view,
+                               SchedulerConfig(slo=0.05, max_batch=4))
+        prof = OnlineProfiler(view, AdaptConfig(refresh_every=0.005,
+                                                min_samples=1, safety=True))
+        eng = ServingEngine([mod], sched, clock=StepClock(), profiler=prof)
+        arrivals = [Request(req_id=i, model=0, arrival=0.0) for i in range(40)]
+        comps, span = eng.run(arrivals, duration=0.05)
+        assert len(comps) == 40
+        assert prof.num_observations > 0
+        assert prof.safety.num_observed >= len(comps)
+        # the refresh swapped the scheduler onto the profiler's view
+        assert sched.table is not view
+        assert sched.table.meta["builder"] == "online"
+        m = eng.metrics(view, 0.05, span)
+        assert len(comps) + eng.dropped + m.residual_queue == 40
+
+    def test_zero_service_sample_is_skipped_not_fatal(self, table):
+        # a coarse live clock can measure a 0.0-length quantum; the shared
+        # ingest path must skip the sample, not crash the serving loop
+        prof = OnlineProfiler(table, AdaptConfig())
+        out = prof.ingest_quantum(0, 0, 1, 0.0, now=1.0, batch=[],
+                                  default_slo=0.05)
+        assert out is None
+        assert prof.num_observations == 0
+
+
+# ---------------------------------------------------------------------------
+# Cluster integration and sweep determinism
+# ---------------------------------------------------------------------------
+
+
+class TestClusterIntegration:
+    def test_g1_drift_adapt_bitwise_single_device(self, table):
+        arrivals = trace()
+        cfg = SchedulerConfig()
+        adapt = AdaptConfig(refresh_every=0.25)
+        single = ServingSimulator(
+            make_scheduler("edgeserving", table, cfg), table, num_models=3,
+            seed=7, drift=ThermalThrottleDrift(onset=0.5, ramp=1.0, peak=2.0),
+            adapt=adapt)
+        ref = single.run(list(arrivals), 3.0, warmup_tasks=50)
+        fleet = make_fleet(
+            "homogeneous", 1, table,
+            drift=[(0, ThermalThrottleDrift(onset=0.5, ramp=1.0, peak=2.0))])
+        sim = ClusterSimulator(fleet, config=cfg, num_models=3, seed=7,
+                               adapt=adapt)
+        got = sim.run(list(arrivals), 3.0, warmup_tasks=50)
+        assert got.completions == ref.completions
+        assert dataclasses.replace(got.metrics, per_device=()) == ref.metrics
+
+    def test_cluster_drift_adapt_rerun_stable(self, table):
+        fleet = make_fleet(
+            "heterogeneous", 2, table,
+            drift=[(d, ContentionDrift(magnitude=2.0)) for d in range(2)])
+        sim = ClusterSimulator(fleet, num_models=3, seed=7,
+                               adapt=AdaptConfig())
+        arrivals = trace(lam=200.0, horizon=2.0)
+        a = sim.run(list(arrivals), 2.0, warmup_tasks=20)
+        b = sim.run(list(arrivals), 2.0, warmup_tasks=20)
+        assert a.completions == b.completions
+        assert a.metrics == b.metrics
+
+    def test_drift_adapt_cells_parallel_bitwise_serial(self, table):
+        runner = SweepRunner(table)
+        specs = [
+            SweepSpec(policy="edgeserving", rate=140.0, horizon=1.5,
+                      warmup_tasks=20, drift="thermal-throttle",
+                      drift_kwargs=(("onset", 0.3), ("peak", 2.0)),
+                      adapt=adapt)
+            for adapt in (None, AdaptConfig())
+        ] + [
+            SweepSpec(policy="edgeserving", scenario="mmpp", rate=280.0,
+                      horizon=1.5, warmup_tasks=20, fleet="heterogeneous",
+                      fleet_size=2, dispatcher="stability-aware",
+                      drift="contention", adapt=AdaptConfig()),
+        ]
+        serial = runner.run(specs, workers=1)
+        parallel = runner.run(specs, workers=2)
+        assert [r.metrics for r in serial] == [r.metrics for r in parallel]
+
+    def test_drift_kwargs_without_drift_rejected(self, table):
+        runner = SweepRunner(table)
+        with pytest.raises(AssertionError):
+            runner.run_cell(SweepSpec(policy="edgeserving", rate=100.0,
+                                      horizon=1.0,
+                                      drift_kwargs=(("peak", 2.0),)))
