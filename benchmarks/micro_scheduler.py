@@ -1,5 +1,5 @@
 """Scheduler-step microbenchmarks: the online decision must fit inside the
-inter-quantum gap (sub-millisecond). Two studies:
+inter-quantum gap (sub-millisecond). Three studies:
 
   * the classic loop-vs-vectorised-vs-lattice decision timing at edge scale
     (M = 3, growing queue depth);
@@ -12,9 +12,19 @@ inter-quantum gap (sub-millisecond). Two studies:
     scale, jnp takes over from M ≳ 64. True-``pallas`` numbers come from
     the same call on a TPU host; interpret mode here is the
     correctness-path timing only.
+  * the **sweep-speedup study**: a fig4-shaped grid (the paper's λ axis x
+    several seeds) through the reference Python event loop versus one
+    vmapped+jitted ``lax.scan`` launch (``repro.core.simfast``), greedy and
+    lattice, with per-cell ``ServingMetrics`` equality asserted before the
+    speedup is reported. Arrival generation is excluded on both sides
+    (identical cost, shared input); timing is engine-only. Target: >= 50x.
+    The scan side is a single XLA launch, so on multi-core hosts it also
+    picks up intra-op parallelism that the serial Python loop cannot — the
+    single-core ratio reported on a 1-CPU runner is the floor.
 
-``REPRO_MICRO_SCHED_SMOKE=1`` (CI) restricts to M ∈ {4, 16} with fewer
-repetitions so the study runs in seconds on CPU-only runners.
+``REPRO_MICRO_SCHED_SMOKE=1`` (CI) restricts to M ∈ {4, 16} / a 2-cell
+sweep grid with fewer repetitions so the studies run in seconds on
+CPU-only runners.
 """
 
 from __future__ import annotations
@@ -32,10 +42,15 @@ from repro.core import (
     ProfileTable,
     QueueSnapshot,
     SchedulerConfig,
+    ServingSimulator,
     VectorizedEdgeServingScheduler,
+    make_scheduler,
+    paper_rate_vector,
+    poisson_arrivals,
+    simulate_scan_batch,
 )
 from repro.kernels.stability_score.ops import stability_scores
-from benchmarks.common import Row
+from benchmarks.common import HORIZON, LAMBDAS, Row
 
 BACKENDS = ("numpy", "jnp", "pallas-interpret")
 
@@ -125,6 +140,68 @@ def _backend_study(smoke: bool) -> List[Row]:
     return rows
 
 
+def _sweep_speedup_study(smoke: bool) -> List[Row]:
+    """fig4-shaped sweep, Python engine vs one compiled scan launch.
+
+    Both engines consume the same pre-generated arrival lanes (generation
+    cost is identical and excluded); the Python side is the reference
+    ``ServingSimulator`` loop run serially per cell, the scan side is one
+    ``simulate_scan_batch`` call covering the whole grid. Every cell's
+    ``ServingMetrics`` must compare equal across engines before the row is
+    emitted — the speedup of a wrong simulation is not interesting.
+    """
+    table = ProfileTable.paper_rtx3080()
+    lambdas = (60.0, 140.0) if smoke else tuple(float(x) for x in LAMBDAS)
+    seeds = (7,) if smoke else (7, 8, 9, 10)
+    horizon = 3.0 if smoke else HORIZON
+    lanes = [poisson_arrivals(paper_rate_vector(lam), horizon, seed=s)
+             for lam in lambdas for s in seeds]
+    n_req = sum(len(l) for l in lanes)
+    reps = 1 if smoke else 3
+
+    rows: List[Row] = []
+    for lattice in (False, True):
+        def sched():
+            return make_scheduler(
+                "edgeserving-lattice" if lattice else "edgeserving",
+                table, SchedulerConfig(slo=0.05))
+
+        py_times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            py_res = [
+                ServingSimulator(sched(), table, num_models=3).run(a, horizon)
+                for a in lanes
+            ]
+            py_times.append(time.perf_counter() - t0)
+        t_py = sorted(py_times)[len(py_times) // 2]
+
+        t0 = time.perf_counter()
+        sc_res = simulate_scan_batch(sched(), table, lanes, horizon,
+                                     num_models=3)
+        t_cold = time.perf_counter() - t0
+        sc_times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            sc_res = simulate_scan_batch(sched(), table, lanes, horizon,
+                                         num_models=3)
+            sc_times.append(time.perf_counter() - t0)
+        t_warm = sorted(sc_times)[len(sc_times) // 2]
+
+        match = sum(p.metrics == s.metrics for p, s in zip(py_res, sc_res))
+        assert match == len(lanes), (
+            f"scan/python metrics diverged on {len(lanes) - match} of "
+            f"{len(lanes)} cells (lattice={lattice})")
+        tag = "lattice" if lattice else "greedy"
+        rows.append(Row(
+            f"micro/simfast-sweep/{tag}", t_warm * 1e6,
+            f"cells={len(lanes)};requests={n_req};python_s={t_py:.2f};"
+            f"scan_cold_s={t_cold:.2f};scan_warm_s={t_warm:.3f};"
+            f"speedup={t_py / t_warm:.1f}x;target=50x;"
+            f"match={match}/{len(lanes)}"))
+    return rows
+
+
 def run() -> List[Row]:
     smoke = bool(os.environ.get("REPRO_MICRO_SCHED_SMOKE"))
     rows = []
@@ -179,4 +256,5 @@ def run() -> List[Row]:
                     "pallas_interpret_cpu"))
 
     rows.extend(_backend_study(smoke))
+    rows.extend(_sweep_speedup_study(smoke))
     return rows

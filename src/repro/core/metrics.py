@@ -112,10 +112,50 @@ def summarize(
                    certainly misses its deadline).
     """
     completions = list(completions)
-    if warmup_tasks >= len(completions):
-        warmup_tasks = len(completions) // 2
-    done = completions[warmup_tasks:]
-    if not done:
+    return summarize_arrays(
+        models=np.array([c.model for c in completions], dtype=np.int64),
+        exits=np.array([c.exit_idx for c in completions], dtype=np.int64),
+        batches=np.array([c.batch_size for c in completions], dtype=np.int64),
+        latencies=np.array([c.total_latency for c in completions]),
+        queueings=np.array([c.queueing for c in completions]),
+        taus=np.array(
+            [slo if c.deadline is None else c.deadline for c in completions]
+        ),
+        table=table,
+        warmup_tasks=warmup_tasks,
+        busy_time=busy_time,
+        span=span,
+        residual_queue=residual_queue,
+        model_map=model_map,
+        dropped=dropped,
+    )
+
+
+def summarize_arrays(
+    models: np.ndarray,
+    exits: np.ndarray,
+    batches: np.ndarray,
+    latencies: np.ndarray,
+    queueings: np.ndarray,
+    taus: np.ndarray,
+    table: ProfileTable,
+    warmup_tasks: int = 100,
+    busy_time: float = 0.0,
+    span: float = 0.0,
+    residual_queue: int = 0,
+    model_map: Optional[Sequence[int]] = None,
+    dropped: int = 0,
+) -> ServingMetrics:
+    """Array-native :func:`summarize`: one aligned column per completion
+    field, ordered by finish time. ``summarize`` delegates here, and the
+    compiled fast path (``repro.core.simfast``) feeds its reconstructed
+    completion arrays in directly — one accounting implementation serves
+    both engines. ``taus`` is the per-completion effective deadline
+    (the request's own, or the global SLO where it has none)."""
+    n_total = len(models)
+    if warmup_tasks >= n_total:
+        warmup_tasks = n_total // 2
+    if n_total - warmup_tasks <= 0:
         # (late + dropped) / (done + dropped) with done empty: every
         # accounted request was shed, and a dropped request certainly
         # missed its deadline.
@@ -128,16 +168,16 @@ def summarize(
             throughput=0.0, utilization=0.0, mean_batch=0.0,
             residual_queue=residual_queue, dropped=dropped, warmup_used=0,
         )
-    lat = np.array([c.total_latency for c in done])
-    queue = np.array([c.queueing for c in done])
-    exits = np.array([c.exit_idx for c in done])
-    batches = np.array([c.batch_size for c in done])
-    models = np.array([c.model for c in done])
-    taus = np.array(
-        [slo if c.deadline is None else c.deadline for c in done]
-    )
+    sl = slice(warmup_tasks, None)
+    lat = np.asarray(latencies, dtype=np.float64)[sl]
+    queue = np.asarray(queueings, dtype=np.float64)[sl]
+    exits = np.asarray(exits, dtype=np.int64)[sl]
+    batches = np.asarray(batches, dtype=np.int64)[sl]
+    models = np.asarray(models, dtype=np.int64)[sl]
+    taus = np.asarray(taus, dtype=np.float64)[sl]
+    done = lat  # alias for the count below
     rows = (
-        np.array([model_map[c.model] for c in done])
+        np.asarray(model_map, dtype=np.int64)[models]
         if model_map is not None
         else models
     )
@@ -147,25 +187,34 @@ def summarize(
     violated = lat > taus
     late = int(np.sum(violated))
 
+    # One stable sort replaces a boolean-mask pass per model: the sorted
+    # order groups each model's completions into one contiguous slice.
     per_model = []
-    for m in np.unique(models):
-        sel = models == m
+    order = np.argsort(models, kind="stable")
+    groups, counts = np.unique(models[order], return_counts=True)
+    bounds = np.concatenate(([0], np.cumsum(counts)))
+    lat_o, queue_o = lat[order], queue[order]
+    exits_o, viol_o = exits[order], violated[order]
+    for gi, m in enumerate(groups):
+        sel = slice(bounds[gi], bounds[gi + 1])
+        pm_p50, pm_p95 = np.percentile(lat_o[sel], [50, 95])
         per_model.append(ModelMetrics(
             model=int(m),
-            num_completed=int(sel.sum()),
-            violation_ratio=float(violated[sel].mean()),
-            p50_latency=float(np.percentile(lat[sel], 50)),
-            p95_latency=float(np.percentile(lat[sel], 95)),
-            mean_queueing=float(queue[sel].mean()),
-            mean_exit_depth=float(exits[sel].mean() + 1.0),
+            num_completed=int(counts[gi]),
+            violation_ratio=float(viol_o[sel].mean()),
+            p50_latency=float(pm_p50),
+            p95_latency=float(pm_p95),
+            mean_queueing=float(queue_o[sel].mean()),
+            mean_exit_depth=float(exits_o[sel].mean() + 1.0),
         ))
 
+    p50, p95, p99 = np.percentile(lat, [50, 95, 99])
     return ServingMetrics(
         num_completed=len(done),
         violation_ratio=float((late + dropped) / (len(done) + dropped)),
-        p50_latency=float(np.percentile(lat, 50)),
-        p95_latency=float(np.percentile(lat, 95)),
-        p99_latency=float(np.percentile(lat, 99)),
+        p50_latency=float(p50),
+        p95_latency=float(p95),
+        p99_latency=float(p99),
         mean_latency=float(lat.mean()),
         mean_queueing=float(queue.mean()),
         mean_exit_depth=float(exits.mean() + 1.0),

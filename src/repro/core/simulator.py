@@ -116,6 +116,11 @@ class ServingSimulator:
         t = 0.0
         next_arrival = 0  # index into the time-sorted arrival list
         n_arr = len(arrivals)
+        # The noise stream is re-seeded per run, like drift below: a second
+        # run() on the same instance with service_noise_cov > 0 must replay
+        # the identical multiplier sequence, not continue the first run's
+        # stream (rerun-bitwise determinism; tests/test_simulator.py).
+        self.rng = np.random.default_rng(self._seed ^ 0x5EED)
         # Drift is re-seeded per run (not per construction): a model shared
         # across simulators cannot cross-contaminate their streams, and
         # run() stays deterministic under reruns.

@@ -80,6 +80,15 @@ class SweepSpec:
     ``adapt`` is an optional :class:`AdaptConfig` switching the cell's
     scheduler(s) from the static cold-start table to online-profiled
     refreshes. Both default to off, which is bitwise the stock cell.
+
+    ``engine`` selects the simulation engine: ``"python"`` (default) is the
+    reference event loop in ``repro.core.simulator``; ``"scan"`` runs the
+    cell through the compiled ``jax.lax.scan`` fast path
+    (``repro.core.simfast``), decision-equivalent for stock Poisson +
+    greedy/lattice cells and loudly ``ScanEngineUnsupported`` for
+    everything the compiled state layout cannot express (fleets, drift,
+    adaptation, service noise, trace replay, non-numpy scoring backends,
+    non-whitelisted policies).
     """
 
     policy: str
@@ -102,6 +111,7 @@ class SweepSpec:
     drift: Optional[str] = None          # DRIFTS name; None/"none" = stock
     drift_kwargs: Tuple[Tuple[str, object], ...] = ()
     adapt: Optional[AdaptConfig] = None  # None = static scheduler table
+    engine: str = "python"               # "python" | "scan" (compiled run)
 
     def rate_vector(self) -> List[float]:
         if self.rates is not None:
@@ -114,6 +124,8 @@ class SweepSpec:
         policy = self.policy
         if self.backend != "numpy":
             policy = f"{policy}[{self.backend}]"
+        if self.engine != "python":
+            policy = f"{policy}[{self.engine}]"
         base = f"{policy}/{self.scenario}/lam{self.rate:g}/seed{self.seed}"
         if self.drift is not None and self.drift != "none":
             base = f"{base}/drift-{self.drift}"
@@ -210,6 +222,13 @@ class SweepRunner:
         rates = spec.rate_vector()
         cfg = SchedulerConfig(slo=spec.slo, max_batch=spec.max_batch,
                               backend=spec.backend)
+        if spec.engine == "scan":
+            return self._run_cell_scan(spec, rates, cfg, t0)
+        if spec.engine != "python":
+            raise ValueError(
+                f"unknown SweepSpec.engine {spec.engine!r}; "
+                f"expected 'python' or 'scan'"
+            )
         process = make_scenario(
             spec.scenario, rates, deadlines=spec.deadlines,
             **dict(spec.scenario_kwargs),
@@ -267,6 +286,54 @@ class SweepRunner:
             )
             res = single.run(arrivals, spec.horizon,
                              warmup_tasks=spec.warmup_tasks)
+        us = (time.perf_counter() - t0) * 1e6
+        return SweepResult(spec, res.metrics, us)
+
+    def _run_cell_scan(self, spec: SweepSpec, rates: List[float],
+                       cfg: SchedulerConfig, t0: float) -> SweepResult:
+        """``engine="scan"``: the cell through the compiled fast path
+        (``repro.core.simfast``). Decision-equivalent to the Python engine
+        for the supported configurations; everything the scan state layout
+        cannot express is rejected loudly here (or by ``simulate_scan``'s
+        own scheduler/deadline validation) rather than approximated."""
+        from repro.core.simfast import ScanEngineUnsupported, simulate_scan
+
+        unsupported = []
+        if spec.fleet is not None:
+            unsupported.append("cluster fleets")
+        if spec.drift not in (None, "none"):
+            unsupported.append(f"device drift ({spec.drift})")
+        if spec.adapt is not None:
+            unsupported.append("online profile adaptation")
+        if self.service_noise_cov > 0:
+            unsupported.append("service-time noise")
+        if spec.scenario == "trace-replay":
+            unsupported.append("trace replay")
+        if spec.backend != "numpy":
+            unsupported.append(f"the {spec.backend!r} scoring backend")
+        if unsupported:
+            raise ScanEngineUnsupported(
+                f"SweepSpec.engine='scan' does not support "
+                f"{', '.join(unsupported)}; run this cell with the "
+                f"Python engine (engine='python')"
+            )
+        process = make_scenario(
+            spec.scenario, rates, deadlines=spec.deadlines,
+            **dict(spec.scenario_kwargs),
+        )
+        arrivals = process.generate(
+            spec.horizon, seed=spec.seed, data_pool=self.data_pool
+        )
+        sched = make_scheduler(spec.policy, self.sched_table or self.table, cfg)
+        res = simulate_scan(
+            sched,
+            self.table,
+            arrivals,
+            spec.horizon,
+            num_models=len(rates),
+            warmup_tasks=spec.warmup_tasks,
+            model_map=self.model_map,
+        )
         us = (time.perf_counter() - t0) * 1e6
         return SweepResult(spec, res.metrics, us)
 

@@ -1,4 +1,9 @@
-"""Test-suite bootstrap: deterministic fallback for ``hypothesis``.
+"""Test-suite bootstrap: ``slow`` marker gating and a deterministic
+fallback for ``hypothesis``.
+
+``@pytest.mark.slow`` marks scaling checks (e.g. the 10^6-request scan run
+in ``tests/test_simfast.py``) that belong in the dedicated CI smoke step,
+not the tier-1 suite. They are skipped unless ``REPRO_RUN_SLOW`` is set.
 
 Seven test modules use hypothesis property checks. On a fresh checkout
 without dev dependencies (``pip install -r requirements-dev.txt``) the
@@ -18,10 +23,32 @@ from __future__ import annotations
 
 import functools
 import inspect
+import os
 import random
 import sys
 import types
 import zlib
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: scaling checks run by the CI smoke step (REPRO_RUN_SLOW=1), "
+        "skipped in tier-1",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if os.environ.get("REPRO_RUN_SLOW") or os.environ.get(
+            "REPRO_SIMFAST_SMOKE"):
+        return
+    skip = pytest.mark.skip(reason="slow: set REPRO_RUN_SLOW=1 to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
 
 try:  # real hypothesis wins whenever it is available
     import hypothesis  # noqa: F401

@@ -140,6 +140,20 @@ class TestEndToEndBehaviour:
         ]
         assert r[0] == r[1]
 
+    def test_rerun_same_instance_bitwise(self, table):
+        # Regression: ``run`` used to consume the noise rng across calls, so
+        # a second ``run`` on the same simulator instance drew a different
+        # noise stream and silently produced different metrics. ``run`` now
+        # re-seeds at entry — reruns are bitwise repeats.
+        cfg = SchedulerConfig(slo=0.05)
+        sim = ServingSimulator(
+            make_scheduler("edgeserving", table, cfg), table,
+            num_models=3, service_noise_cov=0.03, seed=11)
+        arrivals = poisson_arrivals(paper_rate_vector(100), 3.0, seed=11)
+        first = sim.run(arrivals, 3.0)
+        second = sim.run(arrivals, 3.0)
+        assert first.metrics == second.metrics
+
     def test_symphony_sheds_under_overload(self, table):
         cfg = SchedulerConfig(slo=0.05)
         res = run_experiment(make_scheduler("symphony", table, cfg), table,
