@@ -1,0 +1,130 @@
+"""Beyond-paper Fig. 16: flash-crowd anatomy — the first figure that
+*explains* a violation spike instead of counting it.
+
+Every earlier figure reports end-of-window aggregates; this one runs the
+flash-crowd scenario with telemetry on (``SweepSpec(trace=True)``) and
+reads the decision/request timeline back out through
+``repro.core.telemetry.timeline_metrics``: binned queue depth, violation
+ratio, utilization, and mean exit depth over the run, for EdgeServing vs
+the All-Final, EDF, and Symphony baselines on the *identical* arrival
+trace. The anatomy to look for (and what the derived columns quantify):
+as the spike hits, EdgeServing's mean exit depth shifts *down* (the Eq. 6
+feasibility rule buys latency with shallower exits), queue depth stays
+bounded, and the exit depth recovers after the spike drains — while
+all-final's queue grows until violations spike and Symphony sheds instead.
+
+Per policy this emits a headline row (aggregate metrics + the pre/spike/
+post exit-depth split + peak binned queue depth / violation rate) and a
+``.../timeline`` row carrying the binned queue-depth and violation-ratio
+series. For the EdgeServing cell the full trace is also exported as
+Perfetto-loadable Chrome JSON + NDJSON (to ``REPRO_FIG16_OUT`` or a temp
+dir) — open the ``.chrome.json`` in https://ui.perfetto.dev, or summarize
+either file with ``python tools/tracestats.py``. The binned violation
+timeline is checked against the run's aggregate ``violation_ratio``
+(exact, by construction — see docs/observability.md).
+
+``REPRO_FIG16_SMOKE=1`` (CI) shrinks to 2 policies on a short horizon.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import List
+
+import numpy as np
+
+from repro.core import (
+    ProfileTable,
+    SweepRunner,
+    SweepSpec,
+    export_chrome_trace,
+    export_ndjson,
+    timeline_metrics,
+)
+from benchmarks.common import HORIZON, Row, SEED, derived_str, timed
+
+LAM = 160.0
+POLICIES = ("edgeserving", "all-final", "earlyexit-edf", "symphony")
+NUM_BINS = 40
+SPIKE_START_FRAC = 0.4   # FlashCrowdProcess defaults, made explicit so the
+SPIKE_DURATION_FRAC = 0.1  # pre/spike/post windows below are exact
+MAGNITUDE = 5.0
+
+
+def _exit_depth_window(trace, lo: float, hi: float) -> float:
+    """Mean exit depth (1-based) over completions finishing in [lo, hi)."""
+    d = [s.exit_idx + 1 for s in trace.spans
+         if s.status == "completed" and lo <= s.finish < hi]
+    return float(np.mean(d)) if d else float("nan")
+
+
+def _series(vals, fmt: str) -> str:
+    return "|".join("-" if not np.isfinite(v) else fmt % v for v in vals)
+
+
+def run() -> List[Row]:
+    smoke = bool(os.environ.get("REPRO_FIG16_SMOKE"))
+    policies = ("edgeserving", "all-final") if smoke else POLICIES
+    horizon = 2.5 if smoke else HORIZON
+    warmup = 20 if smoke else 100
+    num_bins = 10 if smoke else NUM_BINS
+    spike0 = SPIKE_START_FRAC * horizon
+    spike1 = spike0 + SPIKE_DURATION_FRAC * horizon
+    out_dir = os.environ.get("REPRO_FIG16_OUT") or tempfile.mkdtemp(
+        prefix="fig16_")
+    os.makedirs(out_dir, exist_ok=True)
+
+    table = ProfileTable.paper_rtx3080()
+    runner = SweepRunner(table)
+    rows: List[Row] = []
+    # Cells run serially in-process: traces are large, and shipping them
+    # back through the process fan-out would dominate the cell time.
+    for policy in policies:
+        spec = SweepSpec(
+            policy=policy, scenario="flash-crowd", rate=LAM, seed=SEED,
+            horizon=horizon, warmup_tasks=warmup, trace=True,
+            scenario_kwargs=(
+                ("spike_start", spike0),
+                ("spike_duration", spike1 - spike0),
+                ("magnitude", MAGNITUDE),
+            ),
+            label=f"fig16/{policy}",
+        )
+        res = runner.run_cell(spec)
+        trace, m = res.trace, res.metrics
+        tm = timeline_metrics(trace, num_bins=num_bins, t_end=horizon)
+        agg = tm.aggregate_violation_ratio()
+        ok = np.isclose(agg, m.violation_ratio, rtol=0, atol=1e-12)
+        depth_pre = _exit_depth_window(trace, 0.0, spike0)
+        depth_spike = _exit_depth_window(trace, spike0, spike1)
+        depth_post = _exit_depth_window(trace, spike1, horizon + 1e9)
+        qd = np.nan_to_num(tm.queue_depth)
+        viol = np.nan_to_num(tm.violation_ratio) * 100.0
+        rows.append(Row(
+            spec.label, res.us_per_call,
+            f"{derived_str(m)};timeline_consistent={'yes' if ok else 'NO'};"
+            f"depth_pre={depth_pre:.2f};depth_spike={depth_spike:.2f};"
+            f"depth_post={depth_post:.2f};"
+            f"peak_queue={float(qd.max()):.1f};"
+            f"peak_bin_viol={float(viol.max()):.1f}%;"
+            f"drops={m.dropped};residual={m.residual_queue}",
+        ))
+        rows.append(Row(
+            f"{spec.label}/timeline", 0.0,
+            f"bins={num_bins};bin_s={horizon / num_bins:.3f};"
+            f"queue_depth={_series(qd, '%.1f')};"
+            f"viol_pct={_series(viol, '%.1f')};"
+            f"exit_depth={_series(tm.mean_exit_depth, '%.2f')}",
+        ))
+        if policy == "edgeserving":
+            chrome = os.path.join(out_dir, "fig16_edgeserving.chrome.json")
+            ndjson = os.path.join(out_dir, "fig16_edgeserving.ndjson")
+            _, us1 = timed(export_chrome_trace, trace, chrome)
+            _, us2 = timed(export_ndjson, trace, ndjson)
+            rows.append(Row(
+                "fig16/trace-export", us1 + us2,
+                f"decisions={len(trace.decisions)};spans={len(trace.spans)};"
+                f"events={len(trace.events)};chrome={chrome};ndjson={ndjson}",
+            ))
+    return rows

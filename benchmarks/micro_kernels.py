@@ -2,12 +2,20 @@
 CPU numbers) for attention/exit-head/rmsnorm at serving-relevant shapes.
 Pallas kernels are validated in interpret mode (tests/) and targeted at
 TPU; interpret-mode wall time is not meaningful, so the CSV reports the
-reference-path throughput these kernels must beat on device."""
+reference-path throughput these kernels must beat on device.
+
+Each kernel is timed per iteration — ``jax.block_until_ready`` inside the
+timed region on every call, not amortized over a batch — so the repeats
+form a real latency sample. ``us_per_call`` is the p50 and the derived
+column carries p50/p95, making dispatch-jitter outliers visible instead
+of being averaged away."""
 
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import List, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -19,14 +27,15 @@ from repro.kernels.rmsnorm.ref import rmsnorm_ref
 from benchmarks.common import Row
 
 
-def _time(fn, *args, n=5):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(n):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / n * 1e6
+def _time(fn, *args, n=10) -> Tuple[float, float]:
+    """(p50_us, p95_us) over ``n`` individually-synchronized calls."""
+    jax.block_until_ready(fn(*args))  # compile + warm caches
+    samples = np.empty(n)
+    for i in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples[i] = (time.perf_counter() - t0) * 1e6
+    return float(np.percentile(samples, 50)), float(np.percentile(samples, 95))
 
 
 def run() -> List[Row]:
@@ -39,10 +48,11 @@ def run() -> List[Row]:
     k = jax.random.normal(key, (b, kh, s, d), jnp.float32)
     v = jax.random.normal(key, (b, kh, s, d), jnp.float32)
     fa = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
-    us = _time(fa, q, k, v)
+    us, p95 = _time(fa, q, k, v)
     flops = 4 * b * h * s * s * d
     rows.append(Row(f"micro/attn-ref/b{b}h{h}s{s}d{d}", us,
-                    f"gflops_cpu={flops/us/1e3:.2f}"))
+                    f"gflops_cpu={flops/us/1e3:.2f};"
+                    f"p50_us={us:.0f};p95_us={p95:.0f}"))
 
     # decode attention against a 32k cache slice
     s_kv = 8192
@@ -51,10 +61,11 @@ def run() -> List[Row]:
     v1 = jax.random.normal(key, (4, kh, s_kv, d))
     lens = jnp.full((4,), s_kv, jnp.int32)
     da = jax.jit(decode_attention_ref)
-    us = _time(da, q1, k1, v1, lens)
+    us, p95 = _time(da, q1, k1, v1, lens)
     gb = 2 * 4 * kh * s_kv * d * 4 / 1e9
     rows.append(Row(f"micro/decode-ref/b4h{h}kv{s_kv}", us,
-                    f"cache_gb_per_s={gb/(us/1e6):.2f}"))
+                    f"cache_gb_per_s={gb/(us/1e6):.2f};"
+                    f"p50_us={us:.0f};p95_us={p95:.0f}"))
 
     # exit head at smollm scale
     t, dm, vv = 256, 576, 49152
@@ -62,15 +73,17 @@ def run() -> List[Row]:
     g = jnp.ones((dm,))
     w = jax.random.normal(key, (dm, vv)) * 0.02
     eh = jax.jit(exit_head_ref)
-    us = _time(eh, hh, g, w)
+    us, p95 = _time(eh, hh, g, w)
     rows.append(Row(f"micro/exit-head-ref/t{t}d{dm}v{vv}", us,
-                    f"gflops_cpu={2*t*dm*vv/us/1e3:.2f}"))
+                    f"gflops_cpu={2*t*dm*vv/us/1e3:.2f};"
+                    f"p50_us={us:.0f};p95_us={p95:.0f}"))
 
     # rmsnorm
     x = jax.random.normal(key, (4096, 4096))
     g2 = jnp.ones((4096,))
     rn = jax.jit(lambda x, g: rmsnorm_ref(x, g, 1e-6))
-    us = _time(rn, x, g2)
+    us, p95 = _time(rn, x, g2)
     rows.append(Row("micro/rmsnorm-ref/4096x4096", us,
-                    f"gb_per_s={2*x.nbytes/us/1e3:.2f}"))
+                    f"gb_per_s={2*x.nbytes/us/1e3:.2f};"
+                    f"p50_us={us:.0f};p95_us={p95:.0f}"))
     return rows

@@ -25,6 +25,7 @@ from benchmarks import (
     fig13_workloads,
     fig14_cluster,
     fig15_drift,
+    fig16_timeline,
     micro_kernels,
     micro_scheduler,
     table1_accuracy,
@@ -45,6 +46,7 @@ MODULES = {
     "fig13": fig13_workloads,
     "fig14": fig14_cluster,
     "fig15": fig15_drift,
+    "fig16": fig16_timeline,
     "micro_scheduler": micro_scheduler,
     "micro_kernels": micro_kernels,
 }

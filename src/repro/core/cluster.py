@@ -57,6 +57,7 @@ from repro.core.queues import QueueSnapshot, ServiceQueue
 from repro.core.request import Completion, Request
 from repro.core.scheduler import Scheduler, SchedulerConfig
 from repro.core.simulator import service_noise_multiplier
+from repro.core.telemetry import Trace, Tracer, decision_margin
 from repro.core.urgency import DEFAULT_CLIP, urgency_np
 
 __all__ = [
@@ -444,6 +445,7 @@ class ClusterResult:
     metrics: ServingMetrics          # per_device rollup populated
     completions: List[Completion]    # merged, sorted by (finish, req_id)
     span: float
+    trace: Optional[Trace] = None    # telemetry timeline (tracer attached)
 
     @property
     def dispatch_counts(self) -> Tuple[int, ...]:
@@ -472,6 +474,7 @@ class ClusterSimulator(DeviceLoadView):
         seed: int = 0,
         drain_cap: float = 600.0,
         adapt: Optional[AdaptConfig] = None,
+        tracer: Optional[Tracer] = None,
     ):
         assert len(devices) >= 1
         self.specs = list(devices)
@@ -485,6 +488,9 @@ class ClusterSimulator(DeviceLoadView):
         # Per-device online adaptation: each device's completions feed its
         # own OnlineProfiler over its own table (None = static tables).
         self.adapt = adapt
+        # Record-only telemetry; None (default) skips every branch. Records
+        # carry the owning device id; failover/strand events land too.
+        self.tracer = tracer
         # placement: model -> device ids hosting it
         self.placement: List[List[int]] = [
             [d for d, s in enumerate(self.specs)
@@ -547,6 +553,8 @@ class ClusterSimulator(DeviceLoadView):
         ]
         self.dispatcher.reset(self.seed)
         self._now = 0.0
+        if self.tracer is not None:
+            self.tracer.reset()  # rerun-determinism, like the RNG re-seeds
         fails = sorted(
             (s.fail_at, d) for d, s in enumerate(self.specs)
             if s.fail_at is not None
@@ -616,7 +624,22 @@ class ClusterSimulator(DeviceLoadView):
             utilization=(busy / (span * len(self._devs))) if span > 0 else 0.0,
             per_device=self._per_device(merged, owner, metrics.warmup_used, span),
         )
-        return ClusterResult(metrics=metrics, completions=merged, span=span)
+        trace = None
+        if self.tracer is not None:
+            for d, dev in enumerate(self._devs):  # still queued at run end
+                for q in dev.queues:
+                    for req in q.pending():
+                        self.tracer.record_residual(
+                            req, self.config.slo, device=d)
+            for req in arrivals[ai:]:  # never ingested (past the drain cap)
+                self.tracer.record_residual(req, self.config.slo, device=-1)
+            trace = self.tracer.freeze(
+                engine="cluster", num_models=self.num_models,
+                num_devices=len(self._devs), slo=self.config.slo,
+                horizon=horizon, span=span,
+                warmup_used=metrics.warmup_used, n_arrivals=n_arr)
+        return ClusterResult(metrics=metrics, completions=merged, span=span,
+                             trace=trace)
 
     # -- event handlers --------------------------------------------------------
 
@@ -627,6 +650,8 @@ class ClusterSimulator(DeviceLoadView):
         """Route one request; returns 1 if it stranded (no live host)."""
         eligible = self._eligible(req.model)
         if not eligible:
+            if self.tracer is not None:  # stranded = residual, no device
+                self.tracer.record_residual(req, self.config.slo, device=-1)
             return 1
         d = eligible[0] if len(eligible) == 1 else self.dispatcher.pick(
             req.model, eligible, self, deadline=req.deadline)
@@ -650,7 +675,15 @@ class ClusterSimulator(DeviceLoadView):
         for q in dev.queues:
             orphans.extend(q.pop_batch(len(q)))
         orphans.sort(key=lambda r: (r.arrival, r.req_id))
-        return sum(self._dispatch(r, t) for r in orphans)
+        if self.tracer is not None:
+            self.tracer.record_event(t, "device-failure", device=d,
+                                     orphans=len(orphans))
+        stranded = sum(self._dispatch(r, t) for r in orphans)
+        if self.tracer is not None:
+            self.tracer.record_event(
+                t, "failover", device=d,
+                requeued=len(orphans) - stranded, stranded=stranded)
+        return stranded
 
     def _round(self, d: int, t: float, cap_t: float) -> None:
         """One scheduling round on device ``d`` at time ``t`` — the body of
@@ -665,15 +698,22 @@ class ClusterSimulator(DeviceLoadView):
         if t > cap_t:
             dev.done = True
             return
+        tracer = self.tracer
         snapshot = QueueSnapshot.take(dev.queues, t)
         shed = dev.scheduler.prune(snapshot)
         if shed:
             n_shed = 0
             for m, n in shed:
-                n_shed += len(dev.queues[m].pop_batch(n))
+                popped = dev.queues[m].pop_batch(n)
+                n_shed += len(popped)
+                if tracer is not None:
+                    for req in popped:
+                        tracer.record_drop(req, t, self.config.slo, device=d)
             dev.dropped += n_shed
             if dev.profiler is not None:
                 dev.profiler.observe_dropped(n_shed)
+            if tracer is not None and n_shed:
+                tracer.record_event(t, "shed", device=d, n=n_shed)
             snapshot = QueueSnapshot.take(dev.queues, t)
         decision = dev.scheduler.decide(snapshot)
         if decision is None:
@@ -701,12 +741,26 @@ class ClusterSimulator(DeviceLoadView):
                 batch_size=decision.batch_size,
                 deadline=req.deadline,
             ))
+        if tracer is not None:
+            tracer.record_decision(
+                t, decision, t_end,
+                tuple(snapshot.qlens()),
+                tuple(snapshot.w_max(m) for m in range(self.num_models)),
+                margin=decision_margin(dev.scheduler, snapshot),
+                device=d,
+            )
+            for req in batch:
+                tracer.record_completion(
+                    req, t, t_end, decision.exit_idx, decision.batch_size,
+                    self.config.slo, device=d)
         if dev.profiler is not None:
             refreshed = dev.profiler.ingest_quantum(
                 decision.model, decision.exit_idx, decision.batch_size,
                 service, t_end, batch, self.config.slo)
             if refreshed is not None:
                 dev.scheduler.table = refreshed
+                if tracer is not None:
+                    tracer.record_refresh(t_end, dev.profiler, device=d)
         dev.pending_at = t_end
         dev.in_quantum = True
 

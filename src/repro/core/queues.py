@@ -67,6 +67,11 @@ class ServiceQueue:
     def peek_oldest(self) -> Optional[Request]:
         return self._q[0] if self._q else None
 
+    def pending(self) -> List[Request]:
+        """Queued requests, FIFO order (read-only copy; telemetry uses this
+        for residual-span accounting at end of run)."""
+        return list(self._q)
+
 
 class QueueSnapshot:
     """Immutable per-round view consumed by schedulers.

@@ -84,6 +84,7 @@ from repro.core.scheduler import (
     VectorizedEdgeServingScheduler,
 )
 from repro.core.simulator import SimResult
+from repro.core.telemetry import DecisionRecord, Tracer
 from repro.core.urgency import lattice_stability_scores
 
 __all__ = ["ScanEngineUnsupported", "simulate_scan", "simulate_scan_batch"]
@@ -291,7 +292,16 @@ def _build_chunk_fn(key: _StaticKey):
             code = jnp.where(
                 is_disp, m_star + M * (e_star + E * b_star), -1
             ).astype(jnp.int32)
-            ys = (code, t) if not key.emit_aux else (code, t, scores[pick])
+            if key.emit_aux:
+                # Decision margin: runner-up candidate score minus the
+                # winner's (inf with a single candidate, 0 on an exact
+                # tie) — same definition as telemetry.decision_margin's
+                # second-smallest-minus-smallest on the host.
+                runner_up = jnp.min(jnp.where(n_idx == pick, jnp.inf,
+                                              scores_v))
+                ys = (code, t, scores[pick], runner_up - best)
+            else:
+                ys = (code, t)
             return (t_new, served_new, busy_new, done_new, overflow), ys
 
         return lax.scan(step, carry, None, length=key.chunk_steps, unroll=4)
@@ -442,6 +452,8 @@ def _reconstruct(
     t_final: float,
     keep_completions: bool,
     keep_traces: bool,
+    tracer: Optional[Tracer] = None,
+    slo: float = 0.050,
 ) -> SimResult:
     M = len(lane.tau_vec)
     code = ys["code"]
@@ -540,7 +552,57 @@ def _reconstruct(
                 ),
                 queue_lengths=(),
             ))
-    return SimResult(metrics, completions, traces, span)
+
+    trace = None
+    if tracer is not None:
+        # Host-side timeline reconstruction from the packed decision codes.
+        # Everything but score/margin is recomputed by the *identical* IEEE
+        # ops the Python engine's snapshot performs, so the timeline is
+        # bitwise-equal to the reference trace (property-tested):
+        #   depth_m  = |arrivals_m <= t| - served_before_m   (ingest rule)
+        #   age_m    = t - arrival_of_oldest_queued          (w_max rule)
+        D = len(dm)
+        db64d = db.astype(np.int64)
+        depths = np.zeros((D, M), dtype=np.int64)
+        ages = np.zeros((D, M), dtype=np.float64)
+        for m in range(M):
+            arr_m = lane.arrival[lane.by_model[m]]
+            bm = np.where(dm == m, db64d, 0)
+            served_before = np.cumsum(bm) - bm
+            cnt = np.searchsorted(arr_m, dt0, side="right")
+            depth_m = cnt - served_before
+            depths[:, m] = depth_m
+            if len(arr_m):
+                head = np.minimum(served_before, len(arr_m) - 1)
+                ages[:, m] = np.where(depth_m > 0, dt0 - arr_m[head], 0.0)
+        scores_d = ys["score"][disp]
+        margins_d = ys["margin"][disp]
+        dplat = sched_lat[dm, de, db]
+        for k in range(D):
+            tracer.decisions.append(DecisionRecord(
+                t=float(dt0[k]), device=0, model=int(dm[k]),
+                exit_idx=int(de[k]), batch_size=int(db[k]),
+                predicted_latency=float(dplat[k]), t_end=float(dt1[k]),
+                score=float(scores_d[k]), margin=float(margins_d[k]),
+                queue_depths=tuple(int(x) for x in depths[k]),
+                oldest_ages=tuple(float(x) for x in ages[k]),
+            ))
+        for i in range(n_completed):
+            req = lane.requests[int(ridx[i])]
+            tracer.record_completion(
+                req, float(dispatch[i]), float(finish[i]),
+                int(exits[i]), int(batches[i]), slo)
+        served_total = np.zeros(M, dtype=np.int64)
+        np.add.at(served_total, dm, db64d)
+        for m in range(M):
+            for j in lane.by_model[m][served_total[m]:]:
+                tracer.record_residual(lane.requests[int(j)], slo,
+                                       device=-1)
+        trace = tracer.freeze(
+            engine="scan", num_models=M, num_devices=1, slo=slo,
+            horizon=horizon, span=span, warmup_used=metrics.warmup_used,
+            n_arrivals=n_arr)
+    return SimResult(metrics, completions, traces, span, trace=trace)
 
 
 # ---------------------------------------------------------------------------
@@ -561,6 +623,7 @@ def simulate_scan_batch(
     keep_completions: bool = False,
     keep_traces: bool = False,
     factored: Optional[bool] = None,
+    tracers: Optional[Sequence[Optional[Tracer]]] = None,
 ) -> List[SimResult]:
     """Run one serving experiment per arrival lane, all lanes side by side
     in a single jitted, vmapped ``lax.scan`` (seeds x rates in one XLA
@@ -574,6 +637,13 @@ def simulate_scan_batch(
     the window doubled (one recompile; results are never truncated).
     ``factored=None`` auto-selects the factored-exponential scoring path
     whenever its float64 range condition holds (see module docstring).
+
+    ``tracers`` (optional, one ``telemetry.Tracer`` or ``None`` per lane)
+    turns on telemetry: the scan emits its score/margin aux and the host
+    reconstructs each traced lane's full decision timeline and request
+    spans from the packed codes — bitwise-equal to the Python engine's
+    trace on everything but score/margin (ulp-level, see telemetry docs).
+    Tracing never changes the compiled step's decisions or the metrics.
     """
     _validate_scheduler(scheduler)
     M = num_models or scheduler.table.num_models
@@ -581,6 +651,13 @@ def simulate_scan_batch(
     lanes = [_unpack_lane(lane, M, cfg.slo) for lane in arrival_lanes]
     if not lanes:
         return []
+    if tracers is None:
+        tracers = [None] * len(lanes)
+    assert len(tracers) == len(lanes), "one tracer slot per lane"
+    for tr in tracers:
+        if tr is not None:
+            tr.reset()
+    any_tracer = any(tr is not None for tr in tracers)
     tau_vec = lanes[0].tau_vec
     for lane in lanes[1:]:
         if not np.array_equal(lane.tau_vec, tau_vec):
@@ -629,7 +706,7 @@ def simulate_scan_batch(
             num_models=M, num_exits=E, max_queue=Q, pad_len=P,
             chunk_steps=S, max_batch=Bmax, ladder=ladder, allowed=allowed,
             fallback_exit=scheduler._exits[0], clip=cfg.clip,
-            factored=factored, emit_aux=keep_traces,
+            factored=factored, emit_aux=keep_traces or any_tracer,
         )
         chunk_fn = _build_chunk_fn(key)
         arr = _pack_lanes(lanes, M, P, factored)
@@ -671,11 +748,22 @@ def simulate_scan_batch(
                     "scan engine overflowed a max_queue window already as "
                     "large as the densest arrival trace — please report"
                 )
+            if any_tracer:
+                over = np.asarray(carry[4])
+                t_over = np.asarray(carry[0])
+                for i, tr in enumerate(tracers):
+                    if tr is not None and bool(over[i]):
+                        tr.record_event(
+                            float(t_over[i]), "overflow-retry",
+                            max_queue_from=Q, max_queue_to=Q * 2)
             Q = Q * 2  # retry with a wider window (sticky-flag overflow)
             continue
         break
 
-    names = ("code", "t0") if not keep_traces else ("code", "t0", "score")
+    names = (
+        ("code", "t0", "score", "margin") if key.emit_aux
+        else ("code", "t0")
+    )
     t_fin = np.asarray(carry[0])
     busy_fin = np.asarray(carry[2])
     cat = {
@@ -693,6 +781,7 @@ def simulate_scan_batch(
             lane_ys, lane, table, sched_lat, exec_lat, E, horizon,
             warmup_tasks, model_map, float(busy_fin[i]), float(t_fin[i]),
             keep_completions, keep_traces,
+            tracer=tracers[i], slo=cfg.slo,
         ))
     return results
 
@@ -710,6 +799,7 @@ def simulate_scan(
     keep_completions: bool = False,
     keep_traces: bool = False,
     factored: Optional[bool] = None,
+    tracer: Optional[Tracer] = None,
 ) -> SimResult:
     """Compiled twin of ``ServingSimulator(...).run(...)`` for one trace:
     same arguments-to-metrics contract, one ``lax.scan`` instead of the
@@ -722,4 +812,5 @@ def simulate_scan(
         model_map=model_map, drain_cap=drain_cap, max_queue=max_queue,
         keep_completions=keep_completions, keep_traces=keep_traces,
         factored=factored,
+        tracers=None if tracer is None else [tracer],
     )[0]

@@ -28,6 +28,7 @@ from repro.core.profile import ProfileTable
 from repro.core.queues import QueueSnapshot, ServiceQueue
 from repro.core.request import Completion, Request, ServingTrace
 from repro.core.scheduler import Scheduler
+from repro.core.telemetry import Trace, Tracer, decision_margin
 from repro.core.traffic import poisson_arrivals
 
 
@@ -38,6 +39,7 @@ class SimResult:
     traces: List[ServingTrace]
     span: float
     adapted_table: Optional[ProfileTable] = None  # final online-profiler view
+    trace: Optional[Trace] = None  # telemetry timeline (tracer attached)
 
 
 def service_noise_multiplier(rng: np.random.Generator, cov: float) -> float:
@@ -62,6 +64,7 @@ class ServingSimulator:
         drain_cap: float = 600.0,
         drift: Optional[DriftModel] = None,
         adapt: Optional[AdaptConfig] = None,
+        tracer: Optional[Tracer] = None,
     ):
         """Args:
           scheduler: the policy under test (its table may be a restricted
@@ -78,6 +81,10 @@ class ServingSimulator:
             service times feed an ``OnlineProfiler`` over the scheduler's
             table, which is swapped for a refreshed view on the configured
             cadence. ``None`` for both knobs is bitwise the stock simulator.
+          tracer: optional ``repro.core.telemetry.Tracer``. Record-only:
+            with a tracer attached, decisions and metrics are bitwise
+            identical to an untraced run (property-tested); ``None`` (the
+            default) skips every telemetry branch entirely.
         """
         self.scheduler = scheduler
         self.table = table
@@ -88,6 +95,7 @@ class ServingSimulator:
         self.drain_cap = drain_cap
         self.drift = drift
         self.adapt = adapt
+        self.tracer = tracer
         self._seed = seed
 
     def _exec_row(self, m: int) -> int:
@@ -132,6 +140,13 @@ class ServingSimulator:
         # stays rerunnable / sweep cells hermetic.
         profiler = make_profiler(self.scheduler.table, self.adapt)
         static_table = self.scheduler.table
+        # Telemetry is record-only: every branch below guards on the tracer
+        # and only ever appends to its lists, so decisions / RNG draws /
+        # metrics are bitwise identical with or without one attached.
+        tracer = self.tracer
+        if tracer is not None:
+            tracer.reset()  # rerun-determinism, like the RNG re-seed above
+        slo = self.scheduler.config.slo
 
         def ingest(upto: float) -> int:
             nonlocal next_arrival
@@ -148,10 +163,16 @@ class ServingSimulator:
             if shed:
                 n_shed = 0
                 for m, n in shed:
-                    n_shed += len(queues[m].pop_batch(n))
+                    popped = queues[m].pop_batch(n)
+                    n_shed += len(popped)
+                    if tracer is not None:
+                        for req in popped:
+                            tracer.record_drop(req, t, slo)
                 dropped += n_shed
                 if profiler is not None:
                     profiler.observe_dropped(n_shed)
+                if tracer is not None and n_shed:
+                    tracer.record_event(t, "shed", n=n_shed)
                 snapshot = QueueSnapshot.take(queues, t)
             decision = self.scheduler.decide(snapshot)
 
@@ -194,12 +215,25 @@ class ServingSimulator:
                         deadline=req.deadline,
                     )
                 )
+            if tracer is not None:
+                tracer.record_decision(
+                    t, decision, t_end,
+                    tuple(snapshot.qlens()),
+                    tuple(snapshot.w_max(m) for m in range(self.num_models)),
+                    margin=decision_margin(self.scheduler, snapshot),
+                )
+                for req in batch:
+                    tracer.record_completion(
+                        req, t, t_end, decision.exit_idx,
+                        decision.batch_size, slo)
             if profiler is not None:
                 refreshed = profiler.ingest_quantum(
                     decision.model, decision.exit_idx, decision.batch_size,
                     service, t_end, batch, self.scheduler.config.slo)
                 if refreshed is not None:
                     self.scheduler.table = refreshed
+                    if tracer is not None:
+                        tracer.record_refresh(t_end, profiler)
             if keep_traces:
                 traces.append(
                     ServingTrace(t, t_end, decision, tuple(snapshot.qlens()))
@@ -225,8 +259,22 @@ class ServingSimulator:
             model_map=self.model_map,
             dropped=dropped,
         )
+        trace = None
+        if tracer is not None:
+            # Never served (still queued at run end, or never ingested):
+            # device=-1 throughout — a residual was never assigned a
+            # quantum, and the scan engine reconstructs the same spans.
+            for q in queues:
+                for req in q.pending():
+                    tracer.record_residual(req, slo, device=-1)
+            for req in arrivals[next_arrival:]:
+                tracer.record_residual(req, slo, device=-1)
+            trace = tracer.freeze(
+                engine="python", num_models=self.num_models, num_devices=1,
+                slo=slo, horizon=horizon, span=span,
+                warmup_used=metrics.warmup_used, n_arrivals=n_arr)
         return SimResult(metrics, completions, traces, span,
-                         adapted_table=adapted)
+                         adapted_table=adapted, trace=trace)
 
 
 def run_experiment(
@@ -242,13 +290,15 @@ def run_experiment(
     process: Optional[object] = None,
     drift: Optional[DriftModel] = None,
     adapt: Optional[AdaptConfig] = None,
+    tracer: Optional[Tracer] = None,
 ) -> SimResult:
     """One full serving experiment: arrivals -> simulate -> metrics.
 
     ``process`` is an optional ``repro.core.workloads.ArrivalProcess``; the
     default is the paper's stationary Poisson traffic at ``rates``.
-    ``drift`` / ``adapt`` thread straight into :class:`ServingSimulator`
-    (device drift on true service times / online profile adaptation).
+    ``drift`` / ``adapt`` / ``tracer`` thread straight into
+    :class:`ServingSimulator` (device drift on true service times / online
+    profile adaptation / record-only telemetry).
     """
     if process is not None:
         arrivals = process.generate(horizon, seed=seed)
@@ -263,6 +313,7 @@ def run_experiment(
         seed=seed,
         drift=drift,
         adapt=adapt,
+        tracer=tracer,
     )
     return sim.run(arrivals, horizon, warmup_tasks=warmup_tasks,
                    keep_traces=keep_traces)

@@ -44,6 +44,7 @@ from repro.core.metrics import ServingMetrics
 from repro.core.profile import ProfileTable
 from repro.core.scheduler import SchedulerConfig
 from repro.core.simulator import ServingSimulator
+from repro.core.telemetry import Trace, Tracer
 from repro.core.traffic import paper_rate_vector
 from repro.core.workloads import make_scenario
 
@@ -112,6 +113,9 @@ class SweepSpec:
     drift_kwargs: Tuple[Tuple[str, object], ...] = ()
     adapt: Optional[AdaptConfig] = None  # None = static scheduler table
     engine: str = "python"               # "python" | "scan" (compiled run)
+    trace: bool = False                  # attach a telemetry Tracer
+                                         # (record-only; decisions/metrics
+                                         # stay bitwise-identical)
 
     def rate_vector(self) -> List[float]:
         if self.rates is not None:
@@ -141,6 +145,7 @@ class SweepResult:
     spec: SweepSpec
     metrics: ServingMetrics
     us_per_call: float  # wall microseconds spent on this cell (in its worker)
+    trace: Optional[Trace] = None  # telemetry timeline (spec.trace=True)
 
 
 def _run_cell(runner: "SweepRunner", spec: SweepSpec) -> SweepResult:
@@ -236,6 +241,7 @@ class SweepRunner:
         arrivals = process.generate(
             spec.horizon, seed=spec.seed, data_pool=self.data_pool
         )
+        tracer = Tracer() if spec.trace else None
         if spec.fleet is not None:
             if self.sched_table is not None or self.model_map is not None:
                 raise NotImplementedError(
@@ -261,6 +267,7 @@ class SweepRunner:
                 service_noise_cov=self.service_noise_cov,
                 seed=spec.seed,
                 adapt=spec.adapt,
+                tracer=tracer,
             )
             res = sim.run(arrivals, spec.horizon,
                           warmup_tasks=spec.warmup_tasks)
@@ -283,11 +290,12 @@ class SweepRunner:
                 seed=spec.seed,
                 drift=make_drift(spec.drift, **dict(spec.drift_kwargs)),
                 adapt=spec.adapt,
+                tracer=tracer,
             )
             res = single.run(arrivals, spec.horizon,
                              warmup_tasks=spec.warmup_tasks)
         us = (time.perf_counter() - t0) * 1e6
-        return SweepResult(spec, res.metrics, us)
+        return SweepResult(spec, res.metrics, us, trace=res.trace)
 
     def _run_cell_scan(self, spec: SweepSpec, rates: List[float],
                        cfg: SchedulerConfig, t0: float) -> SweepResult:
@@ -333,9 +341,10 @@ class SweepRunner:
             num_models=len(rates),
             warmup_tasks=spec.warmup_tasks,
             model_map=self.model_map,
+            tracer=Tracer() if spec.trace else None,
         )
         us = (time.perf_counter() - t0) * 1e6
-        return SweepResult(spec, res.metrics, us)
+        return SweepResult(spec, res.metrics, us, trace=res.trace)
 
     def run(
         self, specs: Sequence[SweepSpec], workers: Optional[int] = 1

@@ -32,6 +32,7 @@ from repro.core.profile import ProfileTable
 from repro.core.queues import QueueSnapshot, ServiceQueue
 from repro.core.request import Completion, Request
 from repro.core.scheduler import Scheduler
+from repro.core.telemetry import Tracer, decision_margin
 
 
 @dataclasses.dataclass
@@ -120,17 +121,33 @@ class ServingEngine:
         scheduler: Scheduler,
         clock: Callable[[], float] = time.monotonic,
         profiler: Optional[OnlineProfiler] = None,
+        tracer: Optional[Tracer] = None,
     ):
         self.models = list(models)
         self.scheduler = scheduler
         self.clock = clock
         self.profiler = profiler
+        # Record-only telemetry (repro.core.telemetry): live runs emit the
+        # same decision/span/event vocabulary as the simulators, so one
+        # tools/tracestats.py invocation reads either. None = zero cost.
+        self.tracer = tracer
         self.queues = [ServiceQueue(m) for m in range(len(models))]
         self.completions: List[Completion] = []
         self.dropped = 0
         self._compiled: Dict[Tuple[int, int, int], Callable] = {}
         self._busy_s = 0.0
         self._unsubmitted = 0  # trace tail never ingested (drain-cap exit)
+        # Structured engine counters, cumulative across run() calls (like
+        # the completion log); "engine-counters" trace events snapshot them
+        # at each run() exit. stalls = idle rounds that slept.
+        self.counters: Dict[str, int] = {
+            "batches_served": 0,
+            "requests_served": 0,
+            "stalls": 0,
+            "profiler_refreshes": 0,
+            "dropped": 0,
+            "drain_residual": 0,
+        }
 
     # -- ingress ---------------------------------------------------------------
 
@@ -200,6 +217,8 @@ class ServingEngine:
         next_arr = 0
         n = len(arrivals)
         self._unsubmitted = 0
+        tracer = self.tracer
+        slo = self.scheduler.config.slo
         while True:
             now = self.clock() - t0
             while next_arr < n and arrivals[next_arr].arrival <= now:
@@ -216,12 +235,20 @@ class ServingEngine:
                     break
             snapshot = QueueSnapshot.take(self.queues, now)
             for m, cnt in self.scheduler.prune(snapshot):
-                n_shed = len(self.queues[m].pop_batch(cnt))
+                popped = self.queues[m].pop_batch(cnt)
+                n_shed = len(popped)
                 self.dropped += n_shed
+                self.counters["dropped"] += n_shed
+                if tracer is not None:
+                    for req in popped:
+                        tracer.record_drop(req, now, slo)
+                    if n_shed:
+                        tracer.record_event(now, "shed", n=n_shed)
                 if self.profiler is not None:
                     self.profiler.observe_dropped(n_shed)
             decision = self.scheduler.decide(snapshot)
             if decision is None:
+                self.counters["stalls"] += 1
                 time.sleep(idle_sleep)
                 continue
             batch = self.queues[decision.model].pop_batch(decision.batch_size)
@@ -230,6 +257,16 @@ class ServingEngine:
                           decision.batch_size)
             t_done = self.clock() - t0
             self._busy_s += t_done - t_dispatch
+            self.counters["batches_served"] += 1
+            self.counters["requests_served"] += len(batch)
+            if tracer is not None:
+                tracer.record_decision(
+                    t_dispatch, decision, t_done,
+                    tuple(snapshot.qlens()),
+                    tuple(snapshot.w_max(m)
+                          for m in range(len(self.queues))),
+                    margin=decision_margin(self.scheduler, snapshot),
+                )
             for req in batch:
                 self.completions.append(Completion(
                     req_id=req.req_id, model=req.model, arrival=req.arrival,
@@ -238,6 +275,10 @@ class ServingEngine:
                     batch_size=decision.batch_size,
                     deadline=req.deadline,
                 ))
+                if tracer is not None:
+                    tracer.record_completion(
+                        req, t_dispatch, t_done, decision.exit_idx,
+                        decision.batch_size, slo)
             if self.profiler is not None:
                 refreshed = self.profiler.ingest_quantum(
                     decision.model, decision.exit_idx, decision.batch_size,
@@ -245,7 +286,15 @@ class ServingEngine:
                     self.scheduler.config.slo)
                 if refreshed is not None:
                     self.scheduler.table = refreshed
-        return self.completions, self.clock() - t0
+                    self.counters["profiler_refreshes"] += 1
+                    if tracer is not None:
+                        tracer.record_refresh(t_done, self.profiler)
+        t_exit = self.clock() - t0
+        self.counters["drain_residual"] = (
+            sum(len(q) for q in self.queues) + self._unsubmitted)
+        if tracer is not None:
+            tracer.record_event(t_exit, "engine-counters", **self.counters)
+        return self.completions, t_exit
 
     def metrics(self, table: ProfileTable, slo: float, span: float,
                 warmup_tasks: int = 0):
@@ -260,3 +309,19 @@ class ServingEngine:
                             + self._unsubmitted),
             dropped=self.dropped,
         )
+
+    def trace(self, **meta):
+        """Freeze the attached tracer's timeline as a ``telemetry.Trace``
+        (``None`` when no tracer is attached). Unlike the simulators the
+        engine is long-lived, so the caller decides when to snapshot;
+        residual-span accounting covers whatever is still queued now."""
+        if self.tracer is None:
+            return None
+        slo = self.scheduler.config.slo
+        for q in self.queues:
+            for req in q.pending():
+                self.tracer.record_residual(req, slo, device=-1)
+        base = dict(engine="live", num_models=len(self.models),
+                    num_devices=1, slo=slo)
+        base.update(meta)
+        return self.tracer.freeze(**base)

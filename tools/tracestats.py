@@ -1,0 +1,263 @@
+#!/usr/bin/env python3
+"""Summarize a serving telemetry trace from the command line.
+
+Reads either export format produced by ``repro.core.telemetry`` —
+NDJSON (``export_ndjson``) or Chrome trace-event JSON
+(``export_chrome_trace``), auto-detected — and prints three tables:
+
+  * per-model decision histogram (dispatches, mean exit depth, mean batch);
+  * the top-K worst requests by slack deficit (most-negative slack first,
+    with drops ranked ahead of late completions);
+  * a time-bin table (completions / violations / drops / mean exit depth
+    per bin), the textual cousin of ``timeline_metrics``.
+
+Deliberately standalone — stdlib ``json`` + numpy only, no ``repro``
+imports — so a trace file can be inspected on a machine without the
+package (or a JAX install). Exits non-zero on an empty trace or a Chrome
+file with unmatched request ``b``/``e`` pairs.
+
+    python tools/tracestats.py trace.ndjson
+    python tools/tracestats.py trace.chrome.json --top 20 --bins 25
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def _dec(v):
+    if v in ("NaN", "Infinity", "-Infinity"):
+        return float(v.replace("Infinity", "inf"))
+    return v
+
+
+def _load_ndjson(path: str) -> Tuple[list, list, list, dict]:
+    decisions, spans, events, meta = [], [], [], {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            kind = d.pop("type", None)
+            if kind == "meta":
+                meta = {k: _dec(v) for k, v in d.items()}
+            elif kind == "decision":
+                decisions.append({k: _dec(v) for k, v in d.items()})
+            elif kind == "span":
+                spans.append({k: _dec(v) for k, v in d.items()})
+            elif kind == "event":
+                events.append(d)
+    return decisions, spans, events, meta
+
+
+def _load_chrome(path: str) -> Tuple[list, list, list, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    decisions, spans, events = [], [], []
+    opens: Dict[Tuple[int, str], dict] = {}
+    unmatched_ends = 0
+    us = 1e-6
+    for e in doc.get("traceEvents", []):
+        ph, cat = e.get("ph"), e.get("cat")
+        args = e.get("args", {}) or {}
+        if ph == "i" and cat == "decision":
+            decisions.append({
+                "t": e["ts"] * us, "device": e.get("tid", 0),
+                "model": args["model"], "exit": args["exit"],
+                "batch": args["batch"],
+                "depths": args.get("queue_depths", []),
+            })
+        elif ph == "b" and cat == "request":
+            opens[(e.get("pid"), e["id"])] = {
+                "req": args["req"], "model": args["model"],
+                "device": e.get("tid", 0), "arrival": e["ts"] * us,
+                "status": args["status"],
+                "deadline": (args["deadline_ms"] or float("nan")) * 1e-3,
+                "slack": (args["slack_ms"] if args["slack_ms"] is not None
+                          else float("nan")) * 1e-3,
+                "exit": args.get("exit", -1), "batch": args.get("batch", 0),
+            }
+        elif ph == "e" and cat == "request":
+            span = opens.pop((e.get("pid"), e["id"]), None)
+            if span is None:
+                unmatched_ends += 1
+                continue
+            span["finish"] = e["ts"] * us
+            spans.append(span)
+        elif ph == "i" and cat == "residual":
+            spans.append({
+                "req": args.get("req"), "model": args.get("model"),
+                "device": -1, "arrival": e["ts"] * us,
+                "finish": float("nan"), "slack": float("nan"),
+                "deadline": float("nan"), "exit": -1, "batch": 0,
+                "status": "residual",
+            })
+        elif ph == "i" and cat == "event":
+            events.append({"t": e["ts"] * us, "kind": e.get("name"),
+                           "device": e.get("tid", 0), "payload": args})
+    if opens or unmatched_ends:
+        raise SystemExit(
+            f"error: {len(opens)} unclosed 'b' and {unmatched_ends} "
+            f"unmatched 'e' request events — truncated trace?")
+    meta = doc.get("otherData", {})
+    return decisions, spans, events, meta
+
+
+def load(path: str) -> Tuple[list, list, list, dict]:
+    """Auto-detect the format: Chrome JSON is one object starting with
+    ``{`` whose first line never parses as a full NDJSON record."""
+    with open(path) as f:
+        head = f.read(4096).lstrip()
+    if not head:
+        raise SystemExit(f"error: {path} is empty")
+    try:
+        first = json.loads(head.splitlines()[0])
+        if isinstance(first, dict) and "type" in first:
+            return _load_ndjson(path)
+    except json.JSONDecodeError:
+        pass
+    if head.startswith("{"):
+        return _load_chrome(path)
+    raise SystemExit(f"error: {path} is neither NDJSON nor Chrome trace JSON")
+
+
+def _fmt(v, spec: str = ".2f") -> str:
+    if v is None or (isinstance(v, float) and not math.isfinite(v)):
+        return "-"
+    return format(v, spec)
+
+
+def decision_table(decisions: list) -> List[str]:
+    models = sorted({d["model"] for d in decisions})
+    lines = ["model  dispatches  requests  mean_exit  mean_batch"]
+    for m in models:
+        ds = [d for d in decisions if d["model"] == m]
+        exits = np.array([d["exit"] for d in ds], dtype=float)
+        batches = np.array([d["batch"] for d in ds], dtype=float)
+        lines.append(
+            f"m{m:<5} {len(ds):>10}  {int(batches.sum()):>8}  "
+            f"{_fmt(float(exits.mean() + 1))}{'':>6}"
+            f"{_fmt(float(batches.mean()))}")
+    return lines
+
+
+def worst_requests(spans: list, top: int) -> List[str]:
+    ranked = [s for s in spans if s["status"] in ("completed", "dropped")]
+
+    def deficit(s):
+        # drops have no finish-slack; rank them by full-deadline deficit
+        if s["status"] == "dropped" or not math.isfinite(s["slack"]):
+            return -s["deadline"] if math.isfinite(s["deadline"]) else 0.0
+        return s["slack"]
+
+    ranked.sort(key=deficit)
+    lines = ["req       model  status     slack_ms  deadline_ms  exit  batch"]
+    for s in ranked[:top]:
+        lines.append(
+            f"{s['req']:<9} m{s['model']:<5} {s['status']:<9} "
+            f"{_fmt(s['slack'] * 1e3 if math.isfinite(s['slack']) else s['slack']):>9}  "
+            f"{_fmt(s['deadline'] * 1e3):>11}  {s['exit']:>4}  {s['batch']:>5}")
+    return lines
+
+
+def bin_table(spans: list, decisions: list, bins: int) -> List[str]:
+    comp = [s for s in spans if s["status"] == "completed"]
+    drops = [s for s in spans if s["status"] == "dropped"]
+    times = ([s["finish"] for s in comp + drops]
+             + [d["t"] for d in decisions])
+    times = [t for t in times if isinstance(t, float) and math.isfinite(t)]
+    if not times:
+        return ["(no timed records)"]
+    T = max(times) or 1e-12
+    edges = np.linspace(0.0, T, bins + 1)
+
+    def _bin(ts):
+        return np.clip(np.searchsorted(edges, ts, side="right") - 1,
+                       0, bins - 1)
+
+    completed = np.zeros(bins, dtype=int)
+    late = np.zeros(bins, dtype=int)
+    exit_sum = np.zeros(bins)
+    if comp:
+        b = _bin(np.array([s["finish"] for s in comp]))
+        completed = np.bincount(b, minlength=bins)
+        slk = np.array([s["slack"] for s in comp])
+        late = np.bincount(b[slk < 0], minlength=bins)
+        exit_sum = np.bincount(
+            b, weights=np.array([s["exit"] for s in comp]) + 1.0,
+            minlength=bins)
+    dropped = np.zeros(bins, dtype=int)
+    if drops:
+        dropped = np.bincount(_bin(np.array([s["finish"] for s in drops])),
+                              minlength=bins)
+    depth = np.full(bins, np.nan)
+    if decisions:
+        b = _bin(np.array([d["t"] for d in decisions]))
+        totals = np.array([float(sum(d.get("depths", []) or [0]))
+                           for d in decisions])
+        cnt = np.bincount(b, minlength=bins)
+        np.divide(np.bincount(b, weights=totals, minlength=bins),
+                  cnt, out=depth, where=cnt > 0)
+    lines = ["bin  t0_s   t1_s   done  late  drop  viol%  queue  exit"]
+    for i in range(bins):
+        denom = completed[i] + dropped[i]
+        viol = 100.0 * (late[i] + dropped[i]) / denom if denom else None
+        mexit = exit_sum[i] / completed[i] if completed[i] else None
+        lines.append(
+            f"{i:>3}  {edges[i]:>5.2f}  {edges[i + 1]:>5.2f}  "
+            f"{completed[i]:>4}  {late[i]:>4}  {dropped[i]:>4}  "
+            f"{_fmt(viol, '.1f'):>5}  {_fmt(depth[i], '.1f'):>5}  "
+            f"{_fmt(mexit):>4}")
+    return lines
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="NDJSON or Chrome trace-event JSON file")
+    ap.add_argument("--top", type=int, default=10,
+                    help="worst requests to show (default 10)")
+    ap.add_argument("--bins", type=int, default=20,
+                    help="time bins in the bin table (default 20)")
+    args = ap.parse_args(argv)
+
+    decisions, spans, events, meta = load(args.trace)
+    if not decisions and not spans:
+        print("error: trace has no decision or span records", file=sys.stderr)
+        return 1
+
+    engine = meta.get("engine", "?")
+    counts: Dict[str, int] = {}
+    for s in spans:
+        counts[s["status"]] = counts.get(s["status"], 0) + 1
+    print(f"trace: {args.trace}")
+    print(f"engine={engine} decisions={len(decisions)} spans={len(spans)} "
+          f"events={len(events)}")
+    print("spans by status: " + ", ".join(
+        f"{k}={v}" for k, v in sorted(counts.items())) if counts else "")
+    if events:
+        kinds: Dict[str, int] = {}
+        for e in events:
+            kinds[e["kind"]] = kinds.get(e["kind"], 0) + 1
+        print("events by kind: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(kinds.items())))
+
+    if decisions:
+        print("\n== per-model decisions ==")
+        print("\n".join(decision_table(decisions)))
+    if spans:
+        print(f"\n== worst {args.top} requests by slack deficit ==")
+        print("\n".join(worst_requests(spans, args.top)))
+    print(f"\n== {args.bins}-bin timeline ==")
+    print("\n".join(bin_table(spans, decisions, args.bins)))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
