@@ -1,0 +1,52 @@
+"""Determinism & numerics static analysis (the bitwise-equivalence police).
+
+Every headline guarantee in this repro — scan engine bitwise-equal to the
+Python loop, parallel == serial sweeps, traced == untraced runs — rests on a
+determinism discipline (float64 scheduling arithmetic, seeded RNG, no
+wall-clock or iteration-order leaks in engine code) that property tests can
+only catch *after* a violation ships. This package enforces the contract
+statically, in three layers:
+
+  * :mod:`repro.analysis.detlint`       — AST rule engine (DET001-DET006)
+    over ``src/`` and ``benchmarks/`` with inline suppressions and a
+    committed baseline;
+  * :mod:`repro.analysis.jaxpr_audit`   — traces the compiled artifacts
+    named in the precision manifest to jaxprs and checks dtype contracts,
+    a primitive denylist, and no-recompile guards;
+  * :mod:`repro.analysis.pallas_audit`  — captures each ``kernels/*``
+    ``pallas_call`` layout and verifies BlockSpec/grid divisibility,
+    index-map bounds, the VMEM footprint budget, and explicit memory-space
+    annotations.
+
+``python tools/lint.py`` runs all three; see docs/static-analysis.md for
+the rule catalogue and the suppression/baseline workflow.
+"""
+
+from repro.analysis.detlint import (  # noqa: F401
+    DetlintConfig,
+    Finding,
+    lint_paths,
+    lint_source,
+)
+from repro.analysis.baseline import Baseline  # noqa: F401
+from repro.analysis.jaxpr_audit import (  # noqa: F401
+    audit_artifact,
+    audit_jaxpr,
+    no_recompile_findings,
+)
+from repro.analysis.pallas_audit import audit_kernel, capture_pallas_calls  # noqa: F401
+from repro.analysis.runner import run_suite  # noqa: F401
+
+__all__ = [
+    "Baseline",
+    "DetlintConfig",
+    "Finding",
+    "audit_artifact",
+    "audit_jaxpr",
+    "audit_kernel",
+    "capture_pallas_calls",
+    "lint_paths",
+    "lint_source",
+    "no_recompile_findings",
+    "run_suite",
+]

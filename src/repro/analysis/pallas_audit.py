@@ -1,0 +1,269 @@
+"""Pallas kernel auditor — layout checks on the *real* ``pallas_call``.
+
+Layer 3 of the static-analysis suite. Instead of a hand-maintained shadow
+registry of block shapes (which would drift), the auditor monkeypatches
+``jax.experimental.pallas.pallas_call`` with a recorder and invokes each
+kernel wrapper at its manifest-declared deployment envelope: whatever
+grid / BlockSpecs / scratch the kernel actually constructs is what gets
+audited, with nothing compiled or executed. Checks per captured call:
+
+  PAL001  BlockSpec/grid divisibility — every blocked operand dimension
+          must be a multiple of its block dimension (the repo's kernels
+          pad on the host; a misaligned block silently reads garbage or
+          asserts at Mosaic-lowering time on real TPUs only).
+  PAL002  index-map bounds — evaluating each spec's ``index_map`` over the
+          whole grid must keep every block inside its operand.
+  PAL003  explicit memory-space annotations — every BlockSpec must say
+          where its block lives (``pltpu.VMEM``/``SMEM``/...); an
+          unannotated spec compiles today and moves silently when the
+          Pallas default changes.
+  PAL004  VMEM footprint — the per-grid-step working set (VMEM blocks +
+          scratch) must fit the manifest budget (~16 MB/core).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import itertools
+import math
+from typing import Any, List, Optional, Sequence, Tuple
+
+from repro.analysis.detlint import Finding
+from repro.analysis import manifest as _manifest
+
+__all__ = ["CapturedPallasCall", "capture_pallas_calls", "audit_captured",
+           "audit_kernel", "audit_kernel_manifest"]
+
+_MAX_GRID_POINTS = 65536   # bound on exhaustive index-map evaluation
+
+
+@dataclasses.dataclass
+class CapturedPallasCall:
+    """One recorded ``pallas_call`` layout plus its operand shapes."""
+
+    grid: Tuple[int, ...]
+    in_specs: List[Any]
+    out_specs: List[Any]
+    out_shapes: List[Any]            # ShapeDtypeStruct leaves
+    scratch_shapes: Tuple[Any, ...]
+    operands: List[Tuple[Tuple[int, ...], str]]   # (shape, dtype) per input
+
+
+def _as_list(x) -> list:
+    if x is None:
+        return []
+    if isinstance(x, (list, tuple)):
+        return list(x)
+    return [x]
+
+
+def capture_pallas_calls(fn, *args, **kwargs) -> List[CapturedPallasCall]:
+    """Invoke ``fn`` with ``pallas_call`` replaced by a recorder.
+
+    The recorder returns zeros of ``out_shape`` so wrapper post-processing
+    (slicing off padding, reshapes) still runs; nothing is lowered.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl_mod
+
+    captured: List[CapturedPallasCall] = []
+    real = pl_mod.pallas_call
+
+    def recorder(kernel, *, grid=None, in_specs=None, out_specs=None,
+                 out_shape=None, scratch_shapes=(), **kw):
+        def run(*operands):
+            grid_t = (grid,) if isinstance(grid, int) else tuple(grid or ())
+            captured.append(CapturedPallasCall(
+                grid=grid_t,
+                in_specs=_as_list(in_specs),
+                out_specs=_as_list(out_specs),
+                out_shapes=jax.tree.leaves(out_shape),
+                scratch_shapes=tuple(scratch_shapes or ()),
+                operands=[(tuple(o.shape), str(o.dtype)) for o in operands],
+            ))
+            return jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), out_shape)
+
+        return run
+
+    pl_mod.pallas_call = recorder
+    try:
+        fn(*args, **kwargs)
+    finally:
+        pl_mod.pallas_call = real
+    return captured
+
+
+# ---------------------------------------------------------------------------
+# checks
+# ---------------------------------------------------------------------------
+
+
+def _is_smem(memory_space) -> bool:
+    return memory_space is not None and "smem" in str(memory_space).lower()
+
+
+def _block_bytes(block_shape, shape, dtype) -> int:
+    import numpy as np
+
+    dims = [s if b is None else b
+            for b, s in zip(block_shape, shape)] if block_shape else shape
+    return int(math.prod(dims)) * np.dtype(dtype).itemsize
+
+
+def _check_spec(name, kind, i, spec, shape, dtype, grid, path, line,
+                findings: List[Finding]):
+    """Divisibility + index-map bounds + memory-space presence for one
+    (BlockSpec, operand) pair."""
+    where = f"{name} {kind}[{i}]"
+    if getattr(spec, "memory_space", None) is None:
+        findings.append(Finding(
+            "PAL003", path, line,
+            f"{where}: BlockSpec has no explicit memory_space; declare "
+            f"pltpu.VMEM/SMEM so placement survives Pallas default changes",
+            snippet=f"{where}::memory-space"))
+    block = getattr(spec, "block_shape", None)
+    if block is None:
+        return                      # whole-operand spec: nothing to tile
+    block = tuple(block)
+    if len(block) != len(shape):
+        findings.append(Finding(
+            "PAL001", path, line,
+            f"{where}: block rank {len(block)} != operand rank "
+            f"{len(shape)} (shape {shape})",
+            snippet=f"{where}::rank"))
+        return
+    full = tuple(s if b is None else b for b, s in zip(block, shape))
+    for d, (b, s) in enumerate(zip(full, shape)):
+        if b <= 0 or s % b != 0:
+            findings.append(Finding(
+                "PAL001", path, line,
+                f"{where}: operand dim {d} ({s}) is not divisible by "
+                f"block dim ({b}); pad on the host before the call",
+                snippet=f"{where}::div[{d}]"))
+    index_map = getattr(spec, "index_map", None)
+    if index_map is None or not grid:
+        return
+    n_points = math.prod(grid)
+    if n_points > _MAX_GRID_POINTS:
+        return                      # declared envelope too large to sweep
+    for point in itertools.product(*(range(g) for g in grid)):
+        try:
+            idx = index_map(*point)
+        except TypeError:
+            findings.append(Finding(
+                "PAL002", path, line,
+                f"{where}: index_map arity does not match grid rank "
+                f"{len(grid)}",
+                snippet=f"{where}::arity"))
+            return
+        idx = (idx,) if not isinstance(idx, (tuple, list)) else tuple(idx)
+        if len(idx) != len(full):
+            findings.append(Finding(
+                "PAL002", path, line,
+                f"{where}: index_map returns {len(idx)} indices for a "
+                f"rank-{len(full)} block",
+                snippet=f"{where}::idx-rank"))
+            return
+        for d, (ix, b, s) in enumerate(zip(idx, full, shape)):
+            ix = int(ix)
+            if ix < 0 or (ix + 1) * b > s:
+                findings.append(Finding(
+                    "PAL002", path, line,
+                    f"{where}: grid point {point} maps dim {d} to block "
+                    f"{ix} => elements [{ix * b}, {(ix + 1) * b}) outside "
+                    f"operand dim {s}",
+                    snippet=f"{where}::oob[{d}]"))
+                return
+
+
+def audit_captured(call: CapturedPallasCall, *, name: str,
+                   vmem_budget_bytes: int = _manifest.VMEM_BUDGET_BYTES,
+                   path: str = "<kernel>", line: int = 1) -> List[Finding]:
+    """Run all layout checks on one captured call."""
+    findings: List[Finding] = []
+    if len(call.in_specs) != len(call.operands):
+        findings.append(Finding(
+            "PAL001", path, line,
+            f"{name}: {len(call.in_specs)} in_specs for "
+            f"{len(call.operands)} operands",
+            snippet=f"{name}::spec-count"))
+        return findings
+
+    vmem = 0
+    for i, (spec, (shape, dtype)) in enumerate(
+            zip(call.in_specs, call.operands)):
+        _check_spec(name, "in", i, spec, shape, dtype, call.grid, path,
+                    line, findings)
+        if not _is_smem(getattr(spec, "memory_space", None)):
+            vmem += _block_bytes(getattr(spec, "block_shape", None), shape,
+                                 dtype)
+    for i, (spec, out) in enumerate(zip(call.out_specs, call.out_shapes)):
+        shape, dtype = tuple(out.shape), str(out.dtype)
+        _check_spec(name, "out", i, spec, shape, dtype, call.grid, path,
+                    line, findings)
+        if not _is_smem(getattr(spec, "memory_space", None)):
+            vmem += _block_bytes(getattr(spec, "block_shape", None), shape,
+                                 dtype)
+    for scratch in call.scratch_shapes:
+        shape = tuple(getattr(scratch, "shape", ()))
+        dtype = getattr(scratch, "dtype", "float32")
+        if not _is_smem(getattr(scratch, "memory_space", None)):
+            vmem += _block_bytes(None, shape, dtype)
+
+    if vmem > vmem_budget_bytes:
+        findings.append(Finding(
+            "PAL004", path, line,
+            f"{name}: per-step VMEM working set ~{vmem / 2**20:.2f} MiB "
+            f"exceeds the {vmem_budget_bytes / 2**20:.0f} MiB budget; "
+            f"shrink blocks or split the kernel",
+            snippet=f"{name}::vmem"))
+    return findings
+
+
+def _kernel_location(fn) -> Tuple[str, int]:
+    target = fn
+    while hasattr(target, "func"):
+        target = target.func
+    try:
+        path = inspect.getsourcefile(target) or "<kernel>"
+        _, line = inspect.getsourcelines(target)
+        return path, line
+    except (TypeError, OSError):
+        return "<kernel>", 1
+
+
+def audit_kernel(spec) -> List[Finding]:
+    """Capture + audit one manifest :class:`KernelSpec`."""
+    fn, args, kwargs = spec.build()
+    path, line = _kernel_location(fn)
+    try:
+        calls = capture_pallas_calls(fn, *args, **kwargs)
+    except Exception as e:
+        return [Finding(
+            "PAL000", path, line,
+            f"kernel {spec.name!r} failed under capture: {e}",
+            snippet=f"{spec.name}::capture-error")]
+    if not calls:
+        return [Finding(
+            "PAL000", path, line,
+            f"kernel {spec.name!r} made no pallas_call at the audited "
+            f"envelope (dead wrapper or capture miss)",
+            snippet=f"{spec.name}::no-call")]
+    findings: List[Finding] = []
+    for call in calls:
+        findings.extend(audit_captured(
+            call, name=spec.name,
+            vmem_budget_bytes=spec.vmem_budget_bytes, path=path, line=line))
+    return findings
+
+
+def audit_kernel_manifest(specs: Optional[Sequence] = None) -> List[Finding]:
+    if specs is None:
+        specs = _manifest.KERNEL_SPECS
+    findings: List[Finding] = []
+    for spec in specs:
+        findings.extend(audit_kernel(spec))
+    return findings

@@ -93,7 +93,9 @@ class NumpyScoringBackend(ScoringBackend):
         ) * mask[None, :, :]
         total = urg.sum(axis=(1, 2))
         pos = np.arange(max_q)[None, :]
-        served = (pos < cand_batch[:, None]).astype(np.float32)
+        # float64: this is the declared-f64 reference path (0/1 indicator,
+        # so the old f32 cast was value-exact, but DET005 bans the pattern)
+        served = (pos < cand_batch[:, None]).astype(np.float64)
         own = urg[np.arange(n), cand_queue, :]
         return total - (own * served).sum(axis=1)
 

@@ -86,13 +86,17 @@ def decode_attention_kernel(
         in_specs=[
             pl.BlockSpec((1,), lambda b_, h_, ik: (b_,),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ik: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ik: (b_, h_, 0, 0),
+                         memory_space=pltpu.VMEM),
             pl.BlockSpec((1, 1, bs, d),
-                         lambda b_, h_, ik, g=group: (b_, h_ // g, ik, 0)),
+                         lambda b_, h_, ik, g=group: (b_, h_ // g, ik, 0),
+                         memory_space=pltpu.VMEM),
             pl.BlockSpec((1, 1, bs, d),
-                         lambda b_, h_, ik, g=group: (b_, h_ // g, ik, 0)),
+                         lambda b_, h_, ik, g=group: (b_, h_ // g, ik, 0),
+                         memory_space=pltpu.VMEM),
         ],
-        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ik: (b_, h_, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ik: (b_, h_, 0, 0),
+                               memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((1,), jnp.float32),

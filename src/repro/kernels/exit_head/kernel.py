@@ -81,14 +81,20 @@ def exit_head_kernel(h, gain, w, *, block_t: int = 256, block_v: int = 1024,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bt, d), lambda it, iv: (it, 0)),
-            pl.BlockSpec((d,), lambda it, iv: (0,)),
-            pl.BlockSpec((d, bv), lambda it, iv: (0, iv)),
+            pl.BlockSpec((bt, d), lambda it, iv: (it, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((d,), lambda it, iv: (0,),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((d, bv), lambda it, iv: (0, iv),
+                         memory_space=pltpu.VMEM),
         ],
         out_specs=[
-            pl.BlockSpec((bt,), lambda it, iv: (it,)),
-            pl.BlockSpec((bt,), lambda it, iv: (it,)),
-            pl.BlockSpec((bt,), lambda it, iv: (it,)),
+            pl.BlockSpec((bt,), lambda it, iv: (it,),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((bt,), lambda it, iv: (it,),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((bt,), lambda it, iv: (it,),
+                         memory_space=pltpu.VMEM),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((t,), jnp.int32),

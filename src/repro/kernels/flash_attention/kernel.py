@@ -89,14 +89,18 @@ def flash_attention_kernel(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0),
+                         memory_space=pltpu.VMEM),
             pl.BlockSpec((1, 1, bk, d),
-                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)),
+                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0),
+                         memory_space=pltpu.VMEM),
             pl.BlockSpec((1, 1, bk, d),
-                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)),
+                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0),
+                         memory_space=pltpu.VMEM),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, d),
-                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0),
+                               memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq,), jnp.float32),       # running max m

@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
@@ -32,10 +33,13 @@ def rmsnorm_kernel(x, gain, *, eps: float = 1e-6, block_t: int = 256,
         functools.partial(_rmsnorm_kernel, eps=eps),
         grid=(t // bt,),
         in_specs=[
-            pl.BlockSpec((bt, d), lambda it: (it, 0)),
-            pl.BlockSpec((d,), lambda it: (0,)),
+            pl.BlockSpec((bt, d), lambda it: (it, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((d,), lambda it: (0,),
+                         memory_space=pltpu.VMEM),
         ],
-        out_specs=pl.BlockSpec((bt, d), lambda it: (it, 0)),
+        out_specs=pl.BlockSpec((bt, d), lambda it: (it, 0),
+                               memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
         interpret=interpret,
     )(x, gain)

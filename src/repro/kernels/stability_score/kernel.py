@@ -29,6 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _score_kernel(w_ref, mask_ref, tau_ref, clip_ref, lat_ref, batch_ref,
@@ -90,15 +91,24 @@ def stability_scores_kernel(w, mask, cand_latency, cand_batch,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((m, q), lambda ic: (0, 0)),
-            pl.BlockSpec((m, q), lambda ic: (0, 0)),
-            pl.BlockSpec((m, q), lambda ic: (0, 0)),
-            pl.BlockSpec((1, 1), lambda ic: (0, 0)),
-            pl.BlockSpec((bn,), lambda ic: (ic,)),
-            pl.BlockSpec((bn,), lambda ic: (ic,)),
-            pl.BlockSpec((bn,), lambda ic: (ic,)),
+            pl.BlockSpec((m, q), lambda ic: (0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((m, q), lambda ic: (0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((m, q), lambda ic: (0, 0),
+                         memory_space=pltpu.VMEM),
+            # traced clip scalar: control-flow-style operand, SMEM-resident
+            pl.BlockSpec((1, 1), lambda ic: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((bn,), lambda ic: (ic,),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((bn,), lambda ic: (ic,),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((bn,), lambda ic: (ic,),
+                         memory_space=pltpu.VMEM),
         ],
-        out_specs=pl.BlockSpec((bn,), lambda ic: (ic,)),
+        out_specs=pl.BlockSpec((bn,), lambda ic: (ic,),
+                               memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
         interpret=interpret,
     )(w, mask, tau, clip, cand_latency, cand_batch, cand_queue)

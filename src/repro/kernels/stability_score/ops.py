@@ -39,7 +39,13 @@ def stability_scores(w, mask, cand_latency, cand_batch, cand_queue=None,
             w, mask, cand_latency, cand_batch, cand_queue, tau, clip)
     if cand_queue is not None:
         cand_queue = cand_queue.astype(jax.numpy.int32)
+    # cand_latency is deliberately downcast f64 -> f32 at the kernel
+    # boundary: the kernel computes in float32 throughout, and this path is
+    # a declared-f32 artifact ("stability_score.kernel") in the precision
+    # manifest (src/repro/analysis/manifest.py) with an rtol=2e-4 bound
+    # against the f64 reference, exercised at extreme tau/latency
+    # magnitudes by tests/test_analysis.py::TestStabilityDowncastTolerance.
     return stability_scores_kernel(
-        w, mask, cand_latency.astype(jax.numpy.float32),
+        w, mask, cand_latency.astype(jax.numpy.float32),  # detlint: disable=DET005
         cand_batch.astype(jax.numpy.int32), cand_queue,
         tau=tau, clip=clip, block_m=block_m, interpret=interpret)

@@ -29,7 +29,6 @@ import os
 import queue
 import shutil
 import threading
-import time
 from typing import Any, Optional
 
 import jax
@@ -59,14 +58,21 @@ class Checkpointer:
 
     # -- write path ---------------------------------------------------------
 
-    def save(self, step: int, tree: PyTree, extra: Optional[dict] = None):
+    def save(self, step: int, tree: PyTree, extra: Optional[dict] = None,
+             timestamp: Optional[float] = None):
         """Snapshot + (a)synchronously persist. Returns after the snapshot:
-        device buffers may be donated/overwritten immediately."""
+        device buffers may be donated/overwritten immediately.
+
+        ``timestamp`` is caller-injected wall time for the manifest's
+        ``time`` field; the default ``None`` omits the field entirely, so
+        identical trees produce bytes-identical checkpoints (the manifest
+        is part of the repo's determinism contract — see DET002 in
+        docs/static-analysis.md)."""
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         if self.async_save:
-            self._q.put((step, host_tree, extra or {}))
+            self._q.put((step, host_tree, extra or {}, timestamp))
         else:
-            self._write(step, host_tree, extra or {})
+            self._write(step, host_tree, extra or {}, timestamp)
 
     def wait(self):
         """Block until all queued saves are durable (tests / shutdown)."""
@@ -76,15 +82,16 @@ class Checkpointer:
 
     def _drain(self):
         while True:
-            step, tree, extra = self._q.get()
+            step, tree, extra, timestamp = self._q.get()
             try:
-                self._write(step, tree, extra)
+                self._write(step, tree, extra, timestamp)
             except BaseException as e:  # surfaced on wait()
                 self._last_error = e
             finally:
                 self._q.task_done()
 
-    def _write(self, step: int, host_tree: PyTree, extra: dict):
+    def _write(self, step: int, host_tree: PyTree, extra: dict,
+               timestamp: Optional[float] = None):
         d = _step_dir(self.root, step)
         tmp = d + ".tmp"
         if os.path.exists(tmp):
@@ -97,9 +104,10 @@ class Checkpointer:
             "num_leaves": len(leaves),
             "shapes": [list(l.shape) for l in leaves],
             "dtypes": [str(l.dtype) for l in leaves],
-            "time": time.time(),
             "extra": extra,
         }
+        if timestamp is not None:
+            manifest["time"] = float(timestamp)
         for i, leaf in enumerate(leaves):
             np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), leaf,
                     allow_pickle=False)

@@ -1,0 +1,694 @@
+"""Tests for the determinism & numerics static-analysis suite.
+
+Three layers, each proven in both directions:
+
+  * every DET rule fires on a positive fixture, honours an inline
+    ``# detlint: disable=...``, and stays quiet on the clean twin;
+  * the jaxpr auditor flags a deliberately float32-polluted "scheduling"
+    function declared float64, a denylisted debug callback, and a
+    static-argified recompile trap — and each, injected through
+    ``run_suite``, turns into a nonzero exit code with file:line output;
+  * the Pallas auditor flags a misaligned BlockSpec, an out-of-bounds
+    index map, a missing memory-space annotation, and a blown VMEM budget
+    on synthetic kernels, again end-to-end through ``run_suite``;
+  * tier-1: the repo itself is clean against the committed (empty)
+    baseline, and ``python tools/lint.py`` run as a subprocess agrees —
+    while the same subprocess on a copy of the tree seeded with an
+    ``np.random.rand`` call and an f32 cast in ``core/urgency.py`` exits
+    nonzero naming both files.
+
+Plus the two satellite numerics tests: the stability-score kernel's
+declared f64->f32 downcast stays inside its manifest ``rtol`` under
+extreme tau/latency magnitudes, and checkpoint manifests are
+bytes-identical across runs now that wall time is injected.
+"""
+
+import functools
+import json
+import os
+import shutil
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.baseline import Baseline
+from repro.analysis.detlint import (
+    DetlintConfig,
+    Finding,
+    default_config,
+    lint_source,
+)
+from repro.analysis.jaxpr_audit import audit_artifact, no_recompile_findings
+from repro.analysis.manifest import (
+    PRECISION_ARTIFACTS,
+    ArtifactSpec,
+    KernelSpec,
+    RecompileGuard,
+)
+from repro.analysis.pallas_audit import audit_kernel, capture_pallas_calls
+from repro.analysis.runner import run_suite
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+LINT_CLI = os.path.join(REPO_ROOT, "tools", "lint.py")
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+def lint(src, path="src/sample.py", config=None):
+    if config is None:
+        config = DetlintConfig()
+    return lint_source(textwrap.dedent(src), path, config)
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: detlint rules
+# ---------------------------------------------------------------------------
+
+
+class TestDET001UnseededRNG:
+    def test_numpy_global_rng_flagged(self):
+        got, _ = lint("""
+            import numpy as np
+            VAL = np.random.rand(3)
+        """)
+        assert rules_of(got) == ["DET001"]
+        assert got[0].line == 3
+
+    def test_numpy_alias_resolved(self):
+        got, _ = lint("""
+            import numpy as xp
+            xp.random.shuffle([1, 2])
+        """)
+        assert rules_of(got) == ["DET001"]
+
+    def test_stdlib_random_flagged(self):
+        got, _ = lint("""
+            import random
+            x = random.randint(0, 10)
+        """)
+        assert rules_of(got) == ["DET001"]
+
+    def test_seeded_generator_clean(self):
+        got, _ = lint("""
+            import numpy as np
+            import random
+            rng = np.random.default_rng(42)
+            x = rng.normal(size=3)
+            r = random.Random(7)
+            y = r.randint(0, 10)
+        """)
+        assert got == []
+
+    def test_inline_suppression(self):
+        got, sup = lint("""
+            import numpy as np
+            VAL = np.random.rand(3)  # detlint: disable=DET001
+        """)
+        assert got == []
+        assert rules_of(sup) == ["DET001"]
+
+
+class TestDET002WallClock:
+    CFG = DetlintConfig(engine_modules=("src/repro/core/sim.py",))
+    CFG_ALLOW = DetlintConfig(
+        engine_modules=("src/repro/core/sim.py",),
+        timing_allowlist=(("src/repro/core/sim.py", "bench"),))
+
+    def test_wall_clock_in_engine_flagged(self):
+        got, _ = lint("""
+            import time
+            def step():
+                return time.perf_counter()
+        """, path="src/repro/core/sim.py", config=self.CFG)
+        assert rules_of(got) == ["DET002"]
+
+    def test_datetime_now_flagged(self):
+        got, _ = lint("""
+            import datetime
+            def stamp():
+                return datetime.datetime.now()
+        """, path="src/repro/core/sim.py", config=self.CFG)
+        assert rules_of(got) == ["DET002"]
+
+    def test_outside_engine_clean(self):
+        got, _ = lint("""
+            import time
+            def step():
+                return time.time()
+        """, path="src/repro/runtime/serve.py", config=self.CFG)
+        assert got == []
+
+    def test_allowlisted_scope_clean(self):
+        got, _ = lint("""
+            import time
+            def bench():
+                return time.perf_counter()
+        """, path="src/repro/core/sim.py", config=self.CFG_ALLOW)
+        assert got == []
+
+
+class TestDET003SetIteration:
+    def test_set_sum_flagged(self):
+        got, _ = lint("""
+            def total(items):
+                seen = set(items)
+                acc = 0.0
+                for x in seen:
+                    acc += x
+                return acc
+        """)
+        assert rules_of(got) == ["DET003"]
+
+    def test_set_emission_flagged(self):
+        got, _ = lint("""
+            def emit(trace):
+                for x in {1, 2, 3}:
+                    trace.append(x)
+        """)
+        assert rules_of(got) == ["DET003"]
+
+    def test_sorted_set_clean(self):
+        got, _ = lint("""
+            def total(items):
+                seen = set(items)
+                acc = 0.0
+                for x in sorted(seen):
+                    acc += x
+                return acc
+        """)
+        assert got == []
+
+    def test_dict_iteration_clean(self):
+        # dicts are insertion-ordered since 3.7: deliberately not flagged
+        got, _ = lint("""
+            def total(d):
+                acc = 0.0
+                for k in d:
+                    acc += d[k]
+                return acc
+        """)
+        assert got == []
+
+
+class TestDET004MutableDefault:
+    def test_list_default_flagged(self):
+        got, _ = lint("""
+            def f(acc=[]):
+                acc.append(1)
+                return acc
+        """)
+        assert rules_of(got) == ["DET004"]
+
+    def test_factory_default_flagged(self):
+        got, _ = lint("""
+            def f(*, cache=dict()):
+                return cache
+        """)
+        assert rules_of(got) == ["DET004"]
+
+    def test_none_default_clean(self):
+        got, _ = lint("""
+            def f(acc=None):
+                acc = [] if acc is None else acc
+                return acc
+        """)
+        assert got == []
+
+
+class TestDET005Float32InF64Path:
+    CFG = DetlintConfig(float64_paths=("src/repro/core/",))
+    CFG_ALLOW = DetlintConfig(
+        float64_paths=("src/repro/core/",),
+        float32_allowances=(("src/repro/core/x.py", "Fast.score"),))
+
+    def test_f32_attribute_flagged(self):
+        got, _ = lint("""
+            import jax.numpy as jnp
+            def score(w):
+                return w.astype(jnp.float32).sum()
+        """, path="src/repro/core/x.py", config=self.CFG)
+        assert rules_of(got) == ["DET005"]
+
+    def test_dtype_string_flagged(self):
+        got, _ = lint("""
+            import numpy as np
+            def score(w):
+                return np.zeros(3, dtype="float32") + w.astype("f32")
+        """, path="src/repro/core/x.py", config=self.CFG)
+        assert [f.rule for f in got] == ["DET005", "DET005"]
+
+    def test_outside_f64_path_clean(self):
+        got, _ = lint("""
+            import jax.numpy as jnp
+            def score(w):
+                return w.astype(jnp.float32).sum()
+        """, path="src/repro/kernels/x.py", config=self.CFG)
+        assert got == []
+
+    def test_allowance_scope_clean(self):
+        got, _ = lint("""
+            import jax.numpy as jnp
+            class Fast:
+                def score(self, w):
+                    return w.astype(jnp.float32).sum()
+        """, path="src/repro/core/x.py", config=self.CFG_ALLOW)
+        assert got == []
+
+    def test_float64_clean(self):
+        got, _ = lint("""
+            import numpy as np
+            def score(w):
+                return w.astype(np.float64).sum()
+        """, path="src/repro/core/x.py", config=self.CFG)
+        assert got == []
+
+
+class TestDET006ExceptAndIs:
+    def test_bare_except_flagged(self):
+        got, _ = lint("""
+            def f():
+                try:
+                    return 1
+                except:
+                    return 0
+        """)
+        assert rules_of(got) == ["DET006"]
+
+    def test_is_literal_flagged(self):
+        got, _ = lint("""
+            def f(x):
+                return x is 5
+        """)
+        assert rules_of(got) == ["DET006"]
+
+    def test_is_none_clean(self):
+        got, _ = lint("""
+            def f(x):
+                if x is None or x is True:
+                    return 0
+                try:
+                    return 1
+                except ValueError:
+                    return 0
+        """)
+        assert got == []
+
+
+class TestDetlintMechanics:
+    def test_syntax_error_is_det000(self):
+        got, _ = lint("def f(:\n    pass\n")
+        assert rules_of(got) == ["DET000"]
+
+    def test_fingerprint_is_line_number_free(self):
+        src_a = "import numpy as np\nVAL = np.random.rand(3)\n"
+        src_b = "import numpy as np\n\n\nVAL = np.random.rand(3)\n"
+        (fa,), _ = lint_source(src_a, "p.py", DetlintConfig())
+        (fb,), _ = lint_source(src_b, "p.py", DetlintConfig())
+        assert fa.line != fb.line
+        assert fa.fingerprint == fb.fingerprint
+
+
+class TestBaseline:
+    F = Finding("DET001", "a.py", 3, "msg", snippet="np.random.rand(3)")
+
+    def entry(self, f, justification="known"):
+        return {"rule": f.rule, "path": f.path, "snippet": f.snippet,
+                "justification": justification}
+
+    def test_split_new_accepted_stale(self):
+        other = Finding("DET004", "b.py", 9, "msg", snippet="def f(a=[]):")
+        base = Baseline([self.entry(self.F), self.entry(other)])
+        new, accepted, stale = base.split([self.F])
+        assert new == []
+        assert accepted == [self.F]
+        assert [e["path"] for e in stale] == ["b.py"]
+
+    def test_multiset_matching(self):
+        # two identical lines need two entries: one entry covers only one
+        base = Baseline([self.entry(self.F)])
+        new, accepted, _ = base.split([self.F, self.F])
+        assert len(accepted) == 1 and len(new) == 1
+
+    def test_rebuilt_preserves_justification(self, tmp_path):
+        base = Baseline([self.entry(self.F, "reviewed 2026-08")])
+        rebuilt = base.rebuilt_from([self.F])
+        assert rebuilt.entries[0]["justification"] == "reviewed 2026-08"
+        p = tmp_path / "baseline.json"
+        rebuilt.save(str(p))
+        assert Baseline.load(str(p)).entries == rebuilt.entries
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: jaxpr auditor
+# ---------------------------------------------------------------------------
+
+
+def _polluted_score(w, tau):
+    # a "scheduling" function with a hidden f32 round-trip: the classic
+    # silent-downcast bug the auditor exists to catch
+    shifted = w.astype(jnp.float32) / tau.astype(jnp.float32)
+    return jnp.exp(shifted.astype(jnp.float64) - 1.0).sum()
+
+
+def _clean_score(w, tau):
+    return jnp.exp(w / tau - 1.0).sum()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _score_spec(fn, name):
+    return ArtifactSpec(
+        name=name, dtype_contract="float64",
+        build=lambda: (fn, (_sds((4, 4), np.float64),
+                            _sds((), np.float64)), {}))
+
+
+class TestJaxprAuditor:
+    def test_polluted_artifact_flagged(self):
+        findings = audit_artifact(_score_spec(_polluted_score, "polluted"))
+        assert "JXP001" in rules_of(findings)
+        assert all("polluted" in f.message for f in findings)
+
+    def test_clean_artifact_passes(self):
+        assert audit_artifact(_score_spec(_clean_score, "clean")) == []
+
+    def test_debug_callback_flagged(self):
+        def chatty(w, tau):
+            jax.debug.print("w={w}", w=w.sum())
+            return (w / tau).sum()
+
+        findings = audit_artifact(_score_spec(chatty, "chatty"))
+        assert "JXP002" in rules_of(findings)
+
+    def test_trace_failure_is_jxp000(self):
+        def broken():
+            raise RuntimeError("boom")
+
+        spec = ArtifactSpec(name="broken", dtype_contract="float64",
+                            build=lambda: (broken, (), {}))
+        assert rules_of(audit_artifact(spec)) == ["JXP000"]
+
+    def test_polluted_artifact_fails_suite(self, tmp_path):
+        report = run_suite(
+            REPO_ROOT, layers=("jaxpr",),
+            artifacts=[_score_spec(_polluted_score, "polluted")],
+            recompile_guards=[],
+            baseline_path=str(tmp_path / "baseline.json"))
+        assert report.exit_code == 1
+        out = report.format()
+        assert "JXP001" in out
+        # file:line of the polluted function, repo-relative
+        assert "tests/test_analysis.py:" in out
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _static_tau_score(w, tau):
+    return (w / tau).sum()
+
+
+@jax.jit
+def _traced_tau_score(w, tau):
+    return (w / tau).sum()
+
+
+def _sweep_calls(fn_is_static):
+    w = jnp.ones((4, 4), jnp.float32)
+    taus = (0.02, 0.05, 0.08, 0.12)
+    if fn_is_static:
+        return [((w, t), {}) for t in taus]
+    return [((w, jnp.float32(t)), {}) for t in taus]
+
+
+class TestRecompileGuards:
+    def test_static_argified_sweep_flagged(self):
+        guard = RecompileGuard(
+            name="static-tau",
+            build=lambda: (_static_tau_score, _sweep_calls(True)))
+        findings = no_recompile_findings(guard)
+        assert rules_of(findings) == ["JXP003"]
+        assert "compile cache grew" in findings[0].message
+
+    def test_traced_sweep_clean(self):
+        guard = RecompileGuard(
+            name="traced-tau",
+            build=lambda: (_traced_tau_score, _sweep_calls(False)))
+        assert no_recompile_findings(guard) == []
+
+    def test_uninstrumented_target_flagged(self):
+        guard = RecompileGuard(
+            name="opaque",
+            build=lambda: (lambda x: x, [((1,), {}), ((2,), {})]))
+        findings = no_recompile_findings(guard)
+        assert rules_of(findings) == ["JXP003"]
+        assert "no _cache_size" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# Layer 3: Pallas kernel auditor
+# ---------------------------------------------------------------------------
+
+from jax.experimental import pallas as pl  # noqa: E402
+from jax.experimental.pallas import tpu as pltpu  # noqa: E402
+
+
+def _copy_body(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _toy_kernel(n, bn, *, index_map=None, memory_space=pltpu.VMEM,
+                grid=None):
+    index_map = index_map or (lambda i: (i,))
+    grid = grid or (max(n // bn, 1),)
+    kw = {} if memory_space is None else {"memory_space": memory_space}
+
+    def call(x):
+        return pl.pallas_call(
+            _copy_body,
+            grid=grid,
+            in_specs=[pl.BlockSpec((bn,), index_map, **kw)],
+            out_specs=pl.BlockSpec((bn,), index_map, **kw),
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        )(x)
+
+    def build():
+        return call, (jnp.zeros(n, jnp.float32),), {}
+
+    return build
+
+
+class TestPallasAuditor:
+    def test_aligned_kernel_clean(self):
+        spec = KernelSpec(name="ok", build=_toy_kernel(8, 4))
+        assert audit_kernel(spec) == []
+
+    def test_misaligned_block_flagged(self):
+        spec = KernelSpec(name="misaligned", build=_toy_kernel(8, 3))
+        assert "PAL001" in rules_of(audit_kernel(spec))
+
+    def test_oob_index_map_flagged(self):
+        spec = KernelSpec(
+            name="oob",
+            build=_toy_kernel(8, 4, index_map=lambda i: (i + 1,)))
+        assert "PAL002" in rules_of(audit_kernel(spec))
+
+    def test_missing_memory_space_flagged(self):
+        spec = KernelSpec(name="nospace",
+                          build=_toy_kernel(8, 4, memory_space=None))
+        assert rules_of(audit_kernel(spec)) == ["PAL003"]
+
+    def test_vmem_budget_flagged(self):
+        spec = KernelSpec(name="fat", build=_toy_kernel(8, 4),
+                          vmem_budget_bytes=16)
+        assert rules_of(audit_kernel(spec)) == ["PAL004"]
+
+    def test_dead_wrapper_flagged(self):
+        spec = KernelSpec(
+            name="dead", build=lambda: (lambda x: x + 1, (jnp.zeros(4),), {}))
+        assert rules_of(audit_kernel(spec)) == ["PAL000"]
+
+    def test_capture_records_real_layout(self):
+        # the recorder sees the exact grid/specs the wrapper constructs
+        fn, args, kwargs = _toy_kernel(8, 4)()
+        (call,), = (capture_pallas_calls(fn, *args, **kwargs),)
+        assert call.grid == (2,)
+        assert call.operands == [((8,), "float32")]
+
+    def test_misaligned_kernel_fails_suite(self, tmp_path):
+        report = run_suite(
+            REPO_ROOT, layers=("pallas",),
+            kernel_specs=[KernelSpec(name="misaligned",
+                                     build=_toy_kernel(8, 3))],
+            baseline_path=str(tmp_path / "baseline.json"))
+        assert report.exit_code == 1
+        out = report.format()
+        assert "PAL001" in out
+        assert "tests/test_analysis.py:" in out
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the repo itself is clean
+# ---------------------------------------------------------------------------
+
+
+class TestRepoIsClean:
+    def test_ast_and_pallas_layers_clean(self):
+        # tier-1: the committed tree has no non-baselined findings in the
+        # cheap layers (the full three-layer run is the CI lint step)
+        report = run_suite(REPO_ROOT, layers=("ast", "pallas"))
+        assert report.new == [], report.format()
+        assert report.stale_baseline == []
+        assert report.files_scanned > 50
+
+    def test_precision_artifacts_clean(self):
+        # jaxpr dtype contracts only (recompile guards execute compiled
+        # sweeps and stay in the CI lint step / slow lane)
+        report = run_suite(REPO_ROOT, layers=("jaxpr",), recompile_guards=[])
+        assert report.new == [], report.format()
+
+    @pytest.mark.slow
+    def test_full_suite_clean(self):
+        report = run_suite(REPO_ROOT)
+        assert report.exit_code == 0, report.format()
+
+
+class TestLintCLI:
+    def run_cli(self, *argv):
+        env = dict(os.environ, JAX_PLATFORMS="cpu")
+        return subprocess.run(
+            [sys.executable, LINT_CLI, *argv],
+            capture_output=True, text=True, env=env)
+
+    def test_repo_exits_zero(self):
+        proc = self.run_cli("--ast-only")
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_seeded_violations_exit_nonzero(self, tmp_path):
+        # copy the linted tree, seed one DET001 and one DET005 violation
+        root = tmp_path / "repo"
+        for sub in ("src", "benchmarks"):
+            shutil.copytree(os.path.join(REPO_ROOT, sub), root / sub)
+        bad_rng = root / "src" / "repro" / "core" / "flaky.py"
+        bad_rng.write_text("import numpy as np\nJITTER = np.random.rand(4)\n")
+        urgency = root / "src" / "repro" / "core" / "urgency.py"
+        urgency.write_text(
+            urgency.read_text()
+            + "\n\ndef _downcast(w):\n"
+              "    import jax.numpy as jnp\n"
+              "    return w.astype(jnp.float32)\n")
+        proc = self.run_cli("--ast-only", "--root", str(root))
+        assert proc.returncode == 1, proc.stdout + proc.stderr
+        assert "src/repro/core/flaky.py:2: DET001" in proc.stdout
+        assert "src/repro/core/urgency.py" in proc.stdout
+        assert "DET005" in proc.stdout
+
+    def test_update_baseline_then_clean(self, tmp_path):
+        root = tmp_path / "repo"
+        (root / "src").mkdir(parents=True)
+        (root / "src" / "app.py").write_text(
+            "import numpy as np\nVAL = np.random.rand(3)\n")
+        baseline = str(root / "lint_baseline.json")
+        args = ("--ast-only", "--root", str(root), "--baseline", baseline)
+        assert self.run_cli(*args).returncode == 1
+        assert self.run_cli(*args, "--update-baseline").returncode == 0
+        proc = self.run_cli(*args)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        entries = json.load(open(baseline))["findings"]
+        assert [e["rule"] for e in entries] == ["DET001"]
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the declared stability-score downcast stays inside its bound
+# ---------------------------------------------------------------------------
+
+
+class TestStabilityDowncastTolerance:
+    """kernels/stability_score/ops.py downcasts cand_latency f64->f32; the
+    precision manifest declares the path float32 with an rtol bound. This
+    pins that bound against the float64 reference at extreme magnitudes."""
+
+    RTOL = next(a.rtol for a in PRECISION_ARTIFACTS
+                if a.name == "stability_score.kernel")
+
+    @pytest.mark.parametrize("tau,lat_scale", [
+        (1e-3, 1e-6),   # microsecond latencies against a ms deadline
+        (1e-3, 5e-3),   # deep saturation: everything rides the clip
+        (0.05, 0.02),   # the paper's operating point
+        (1e3, 1e2),     # huge magnitudes: f32 mantissa stress
+    ])
+    def test_kernel_matches_f64_reference(self, tau, lat_scale):
+        from repro.core.scoring import NumpyScoringBackend
+        from repro.kernels.stability_score.ops import stability_scores
+
+        rng = np.random.default_rng(17)
+        m, q, n = 4, 16, 24
+        w = np.sort(rng.uniform(0, 2 * tau, (m, q)))[:, ::-1].copy()
+        mask = (rng.uniform(size=(m, q)) < 0.8).astype(np.float64)
+        lat = rng.uniform(0.1 * lat_scale, lat_scale, n)
+        bat = rng.integers(1, q, n)
+        cq = rng.integers(0, m, n)
+
+        ref = NumpyScoringBackend().score(w, mask, lat, bat, cq, tau)
+        got = np.asarray(stability_scores(
+            jnp.asarray(w, jnp.float32), jnp.asarray(mask, jnp.float32),
+            jnp.asarray(lat, jnp.float32), jnp.asarray(bat, jnp.int32),
+            jnp.asarray(cq, jnp.int32), tau=jnp.float32(tau),
+            clip=jnp.float32(10.0), interpret=True))
+
+        denom = np.maximum(np.abs(ref), 1e-30)
+        rel = np.max(np.abs(got.astype(np.float64) - ref) / denom)
+        assert rel <= self.RTOL, (tau, lat_scale, rel)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: bytes-identical checkpoint manifests
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpointDeterminism:
+    def _tree(self):
+        rng = np.random.default_rng(5)
+        return {"w": rng.normal(size=(4, 3)), "step_count": np.int64(7)}
+
+    def _save(self, root, **kwargs):
+        from repro.runtime.checkpoint import Checkpointer
+
+        ckpt = Checkpointer(str(root), async_save=False)
+        ckpt.save(3, self._tree(), extra={"lr": 0.1}, **kwargs)
+        return os.path.join(str(root), "step_000000003")
+
+    def test_manifest_bytes_identical_across_runs(self, tmp_path):
+        d1 = self._save(tmp_path / "a")
+        d2 = self._save(tmp_path / "b")
+        for name in sorted(os.listdir(d1)):
+            with open(os.path.join(d1, name), "rb") as f1, \
+                    open(os.path.join(d2, name), "rb") as f2:
+                assert f1.read() == f2.read(), name
+
+    def test_timestamp_omitted_by_default(self, tmp_path):
+        d = self._save(tmp_path / "a")
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        assert "time" not in manifest
+
+    def test_injected_timestamp_recorded(self, tmp_path):
+        d = self._save(tmp_path / "a", timestamp=1722.5)
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        assert manifest["time"] == 1722.5
+
+    def test_round_trip_restores_tree(self, tmp_path):
+        from repro.runtime.checkpoint import Checkpointer
+
+        self._save(tmp_path / "a")
+        ckpt = Checkpointer(str(tmp_path / "a"), async_save=False)
+        step, tree, extra = ckpt.restore(template=self._tree())
+        assert step == 3 and extra == {"lr": 0.1}
+        np.testing.assert_array_equal(tree["w"], self._tree()["w"])

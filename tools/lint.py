@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Determinism & numerics static-analysis CLI.
+
+Runs the three-layer suite from ``repro.analysis`` over the repo:
+
+    python tools/lint.py                    # all layers, exit 1 on findings
+    python tools/lint.py --ast-only         # fast AST pass only
+    python tools/lint.py --update-baseline  # accept current findings
+    python tools/lint.py --paths src/repro/core/urgency.py
+    python tools/lint.py -v                 # also show baselined/suppressed
+
+Exit code 0 means: no findings outside the committed baseline
+(``tools/lint_baseline.json``) and no stale baseline entries are treated
+as errors (stale entries are reported but informational). See
+docs/static-analysis.md for the rule catalogue and workflow.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        description="determinism & numerics static analysis")
+    parser.add_argument("--root", default=_REPO_ROOT,
+                        help="repo root to lint (default: this repo)")
+    parser.add_argument("--ast-only", action="store_true",
+                        help="run only the AST layer (no jax import)")
+    parser.add_argument("--layers", default=None,
+                        help="comma-separated subset of ast,jaxpr,pallas")
+    parser.add_argument("--paths", nargs="*", default=None,
+                        help="repo-relative .py files for the AST layer "
+                             "(default: all of src/ and benchmarks/)")
+    parser.add_argument("--baseline", default=None,
+                        help="baseline file (default: "
+                             "<root>/tools/lint_baseline.json)")
+    parser.add_argument("--update-baseline", action="store_true",
+                        help="rewrite the baseline from this run's findings")
+    parser.add_argument("-v", "--verbose", action="store_true",
+                        help="also print baselined and suppressed findings")
+    args = parser.parse_args(argv)
+
+    root = os.path.abspath(args.root)
+    # make `python tools/lint.py` work without PYTHONPATH=src
+    src = os.path.join(_REPO_ROOT, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+
+    if args.layers:
+        layers = tuple(x.strip() for x in args.layers.split(",") if x.strip())
+    elif args.ast_only:
+        layers = ("ast",)
+    else:
+        layers = ("ast", "jaxpr", "pallas")
+    unknown = set(layers) - {"ast", "jaxpr", "pallas"}
+    if unknown:
+        parser.error(f"unknown layers: {sorted(unknown)}")
+
+    if layers != ("ast",):
+        # the jaxpr/pallas layers trace tiny artifacts; CPU is all they need
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    from repro.analysis.runner import run_suite
+
+    report = run_suite(
+        root,
+        layers,
+        paths=args.paths,
+        baseline_path=args.baseline,
+        update_baseline=args.update_baseline,
+    )
+    print(report.format(verbose=args.verbose))
+    if args.update_baseline:
+        print(f"baseline rewritten with {len(report.accepted)} entr"
+              f"{'y' if len(report.accepted) == 1 else 'ies'}")
+        return 0
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())
