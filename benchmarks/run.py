@@ -26,6 +26,7 @@ from benchmarks import (
     fig14_cluster,
     fig15_drift,
     fig16_timeline,
+    fig17_seedband,
     micro_kernels,
     micro_scheduler,
     table1_accuracy,
@@ -47,6 +48,7 @@ MODULES = {
     "fig14": fig14_cluster,
     "fig15": fig15_drift,
     "fig16": fig16_timeline,
+    "fig17": fig17_seedband,
     "micro_scheduler": micro_scheduler,
     "micro_kernels": micro_kernels,
 }

@@ -106,6 +106,8 @@ ENGINE_MODULES: Tuple[str, ...] = (
     "src/repro/core/simulator.py",
     "src/repro/core/simfast.py",
     "src/repro/core/cluster.py",
+    "src/repro/core/clusterfast.py",
+    "src/repro/core/seedband.py",
     "src/repro/core/telemetry.py",
 )
 
@@ -201,6 +203,63 @@ def _build_scan_step(factored: bool):
     return fn, args, {}
 
 
+def _cluster_chunk_key():
+    from repro.core.clusterfast import _ClusterKey
+
+    # Tiny but fully exercising key: 2 devices, 2 models, 2 exits, the
+    # least-loaded dispatcher (drain-table backlog fold), a 2-arrival
+    # burst, greedy single-rung ladder for caps 0..2.
+    return _ClusterKey(
+        num_devices=2, num_models=2, num_exits=2, max_queue=4, pad_len=8,
+        chunk_steps=4, burst=2, max_batch=2, ladder=((0,), (1,), (2,)),
+        allowed=(True, True), fallback_exit=0, clip=10.0, factored=True,
+        dispatcher="least-loaded",
+    )
+
+
+def _build_cluster_step():
+    import numpy as np
+    from repro.core.clusterfast import _build_cluster_chunk_fn
+
+    key = _cluster_chunk_key()
+    fn = _build_cluster_chunk_fn(key)
+    lanes = 2
+    g, m, e, q, p = (key.num_devices, key.num_models, key.num_exits,
+                     key.max_queue, key.pad_len)
+    b1, r = key.max_batch + 1, len(key.ladder[0])
+    carry = (
+        _sds((lanes,), np.int32),                    # ai
+        _sds((lanes, g, m, q), np.float64),          # qarr
+        _sds((lanes, g, m, q), np.float64),          # qew
+        _sds((lanes, g, m), np.int32),               # qhead
+        _sds((lanes, g, m), np.int32),               # qlen
+        _sds((lanes, g), np.float64),                # pend
+        _sds((lanes, g), np.bool_),                  # inq
+        _sds((lanes, g), np.bool_),                  # alive
+        _sds((lanes, g), np.bool_),                  # done
+        _sds((lanes, g), np.float64),                # clock
+        _sds((lanes, g), np.float64),                # busy
+        _sds((lanes,), np.int32),                    # rr
+        _sds((lanes,), np.bool_),                    # blocked
+        _sds((lanes,), np.bool_),                    # over
+    )
+    args = (
+        carry,
+        _sds((lanes, p), np.float64),                # arr_t
+        _sds((lanes, p), np.int32),                  # arr_m
+        _sds((lanes, p), np.float64),                # arr_ew
+        _sds((g, m, b1, e, r), np.float64),          # lat_by_cap
+        _sds((g, m, e, b1), np.float64),             # exec_lat
+        _sds((g, m, q + 1), np.float64),             # drain_tab
+        _sds((g, m), np.float64),                    # b1_final
+        _sds((m,), np.float64),                      # tau_vec
+        _sds((g, m), np.bool_),                      # placement mask
+        _sds((), np.float64),                        # horizon + drain cap
+        _sds((), np.float64),                        # failure barrier
+    )
+    return fn, args, {}
+
+
 def _build_jnp_score():
     import numpy as np
     from repro.core.scoring import _jnp_score
@@ -252,6 +311,15 @@ PRECISION_ARTIFACTS: Tuple[ArtifactSpec, ...] = (
         build=lambda: _build_scan_step(False),
         notes="the compiled serving round on the direct Eq. 3 path (long-"
               "horizon fallback).",
+    ),
+    ArtifactSpec(
+        name="clusterfast.scan_step[least-loaded]",
+        dtype_contract="float64",
+        build=_build_cluster_step,
+        notes="the compiled cluster step (arrival burst + device round + "
+              "dispatcher fold over [G,M,Q] rings); bitwise-equal decisions "
+              "and metrics vs ClusterSimulator require pure float64 — the "
+              "one-ulp idle poke and drain-table folds die in f32.",
     ),
     ArtifactSpec(
         name="scoring.jnp_backend",

@@ -88,16 +88,15 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 
-def drain_estimate(
-    scheduler: Scheduler, qlens: Sequence[int], exit_idx: Optional[int] = None
+def drain_cell(
+    scheduler: Scheduler, model: int, qlen: int,
+    exit_idx: Optional[int] = None,
 ) -> float:
-    """Expected time to drain ``qlens`` under the scheduler's batch ladder.
+    """Drain time of one ``(model, qlen)`` queue in isolation.
 
     Closed form over the Eq. 5 rule ``B* = min(|Q|, B_cap)``: the queue
     drains as ``n // B_cap`` full batches plus one remainder rung, so the
-    O(queue-length) serve-loop collapses to a quotient and a lookup —
-    results identical up to float summation order (pinned to 1e-12 by a
-    regression test in ``tests/test_router.py``).
+    O(queue-length) serve-loop collapses to a quotient and a lookup.
     ``B_cap`` is read from the policy itself (``scheduler.batch_size``), so a
     bs=1 ablation or a small-``B_max`` deployment advertises its true
     (slower) drain time. The closed form is used only for policies running
@@ -108,23 +107,41 @@ def drain_estimate(
     """
     table = scheduler.table
     e = table.num_exits - 1 if exit_idx is None else exit_idx
-    min_form = type(scheduler).batch_size is Scheduler.batch_size
+    n = int(qlen)
+    if n <= 0:
+        return 0.0
+    if type(scheduler).batch_size is not Scheduler.batch_size:
+        sub = 0.0  # custom ladder: serve it out exactly
+        while n > 0:
+            b = scheduler.batch_size(n)
+            sub += table(model, e, b)
+            n -= b
+        return sub
+    cap = scheduler.batch_size(n)
+    full, rem = divmod(n, cap)
+    sub = full * table(model, e, cap)
+    if rem:
+        sub += table(model, e, rem)
+    return sub
+
+
+def drain_estimate(
+    scheduler: Scheduler, qlens: Sequence[int], exit_idx: Optional[int] = None
+) -> float:
+    """Expected time to drain ``qlens`` under the scheduler's batch ladder:
+    one :func:`drain_cell` per queue, accumulated per-model-subtotal-first
+    so the sum is a fixed left-to-right fold over model index. The compiled
+    cluster engine (``repro.core.clusterfast``) precomputes a
+    ``[model, qlen]`` table of drain_cell values and replays the identical
+    fold, so dispatcher backlog comparisons agree bitwise across engines
+    (results differ from a fully interleaved accumulation only in float
+    summation order, pinned to 1e-12 by a regression test in
+    ``tests/test_router.py``)."""
     total = 0.0
     for m, n in enumerate(qlens):
-        n = int(n)
-        if n <= 0:
+        if int(n) <= 0:
             continue
-        if not min_form:  # custom ladder: serve it out exactly
-            while n > 0:
-                b = scheduler.batch_size(n)
-                total += table(m, e, b)
-                n -= b
-            continue
-        cap = scheduler.batch_size(n)
-        full, rem = divmod(n, cap)
-        total += full * table(m, e, cap)
-        if rem:
-            total += table(m, e, rem)
+        total += drain_cell(scheduler, m, n, exit_idx)
     return total
 
 

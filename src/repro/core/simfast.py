@@ -77,6 +77,7 @@ from repro.core.baselines import AllFinalDeadlineAwareScheduler, NoBatchingSched
 from repro.core.metrics import summarize_arrays
 from repro.core.profile import ProfileTable
 from repro.core.request import Completion, Decision, Request, ServingTrace
+from repro.core.workloads import TraceColumns
 from repro.core.scheduler import (
     EdgeServingScheduler,
     LatticeEdgeServingScheduler,
@@ -345,19 +346,25 @@ class _Lane:
 
 
 def _unpack_lane(
-    arrivals: Sequence[Request], num_models: int, slo: float
+    arrivals, num_models: int, slo: float
 ) -> _Lane:
-    # map(attrgetter) keeps attribute extraction in C: this runs once per
-    # request per run, so it is the scan engine's host-side hot loop.
     n = len(arrivals)
-    model = np.fromiter(
-        map(operator.attrgetter("model"), arrivals), dtype=np.int64, count=n
-    )
-    arrival = np.fromiter(
-        map(operator.attrgetter("arrival"), arrivals),
-        dtype=np.float64,
-        count=n,
-    )
+    if isinstance(arrivals, TraceColumns):
+        # Columnar lane: already the arrays this function exists to build.
+        model = arrivals.model
+        arrival = arrivals.arrival
+    else:
+        # map(attrgetter) keeps attribute extraction in C: this runs once
+        # per request per run, so it is the scan engine's host-side hot loop.
+        model = np.fromiter(
+            map(operator.attrgetter("model"), arrivals),
+            dtype=np.int64, count=n,
+        )
+        arrival = np.fromiter(
+            map(operator.attrgetter("arrival"), arrivals),
+            dtype=np.float64,
+            count=n,
+        )
     if n and np.any(np.diff(arrival) < 0):
         raise ValueError("arrivals must be sorted by arrival time")
     if n and (model.min() < 0 or model.max() >= num_models):
@@ -367,14 +374,20 @@ def _unpack_lane(
         )
     tau_vec = np.full(num_models, slo, dtype=np.float64)
     by_model = [np.flatnonzero(model == m) for m in range(num_models)]
-    distinct = set(map(operator.attrgetter("deadline"), arrivals))
-    if distinct and distinct != {None}:
+    if isinstance(arrivals, TraceColumns):
+        deadline = arrivals.deadline          # [n] with NaN = None, or None
+    else:
+        deadline = None
+        distinct = set(map(operator.attrgetter("deadline"), arrivals))
+        if distinct and distinct != {None}:
+            deadline = np.fromiter(
+                (np.nan if r.deadline is None else r.deadline
+                 for r in arrivals),
+                dtype=np.float64,
+                count=n,
+            )
+    if deadline is not None:
         # Per-request deadlines present: supported iff constant per model.
-        deadline = np.fromiter(
-            (np.nan if r.deadline is None else r.deadline for r in arrivals),
-            dtype=np.float64,
-            count=n,
-        )
         for m in range(num_models):
             d = deadline[by_model[m]]
             if len(d) == 0:

@@ -107,6 +107,7 @@ class SweepSpec:
     fleet: Optional[str] = None          # None = single-device cell
     fleet_size: int = 1
     dispatcher: str = "least-loaded"
+    power_d: int = 2                     # stability-aware power-of-d fan-in
     fail_at: Tuple[Tuple[int, float], ...] = ()
     backend: str = "numpy"
     drift: Optional[str] = None          # DRIFTS name; None/"none" = stock
@@ -262,7 +263,8 @@ class SweepRunner:
                            fail_at=spec.fail_at, drift=fleet_drift),
                 policy=spec.policy,
                 config=cfg,
-                dispatcher=make_dispatcher(spec.dispatcher, slo=spec.slo),
+                dispatcher=make_dispatcher(spec.dispatcher, slo=spec.slo,
+                                           power_d=spec.power_d),
                 num_models=len(rates),
                 service_noise_cov=self.service_noise_cov,
                 seed=spec.seed,
@@ -300,15 +302,15 @@ class SweepRunner:
     def _run_cell_scan(self, spec: SweepSpec, rates: List[float],
                        cfg: SchedulerConfig, t0: float) -> SweepResult:
         """``engine="scan"``: the cell through the compiled fast path
-        (``repro.core.simfast``). Decision-equivalent to the Python engine
-        for the supported configurations; everything the scan state layout
-        cannot express is rejected loudly here (or by ``simulate_scan``'s
-        own scheduler/deadline validation) rather than approximated."""
+        (``repro.core.simfast`` for single-device cells,
+        ``repro.core.clusterfast`` when ``spec.fleet`` is set). Decision-
+        equivalent to the Python engine for the supported configurations;
+        everything the scan state layouts cannot express is rejected
+        loudly here (or by the engines' own validation) rather than
+        approximated."""
         from repro.core.simfast import ScanEngineUnsupported, simulate_scan
 
         unsupported = []
-        if spec.fleet is not None:
-            unsupported.append("cluster fleets")
         if spec.drift not in (None, "none"):
             unsupported.append(f"device drift ({spec.drift})")
         if spec.adapt is not None:
@@ -332,6 +334,40 @@ class SweepRunner:
         arrivals = process.generate(
             spec.horizon, seed=spec.seed, data_pool=self.data_pool
         )
+        if spec.fleet is not None:
+            from repro.core.clusterfast import simulate_cluster_scan
+
+            if self.sched_table is not None or self.model_map is not None:
+                raise NotImplementedError(
+                    "cluster cells build per-device schedulers from the "
+                    "fleet's own tables; a runner-level sched_table / "
+                    "model_map would be silently ignored — use a "
+                    "fleet-less spec or encode the view in the fleet's "
+                    "DeviceSpecs via ClusterSimulator directly"
+                )
+            res = simulate_cluster_scan(
+                make_fleet(spec.fleet, spec.fleet_size, self.table,
+                           fail_at=spec.fail_at),
+                arrivals,
+                spec.horizon,
+                policy=spec.policy,
+                config=cfg,
+                dispatcher=spec.dispatcher,
+                power_d=spec.power_d,
+                num_models=len(rates),
+                warmup_tasks=spec.warmup_tasks,
+                seed=spec.seed,
+                tracer=Tracer() if spec.trace else None,
+            )
+            us = (time.perf_counter() - t0) * 1e6
+            return SweepResult(spec, res.metrics, us, trace=res.trace)
+        if (spec.fail_at or spec.fleet_size != 1
+                or spec.dispatcher != "least-loaded"):
+            raise ValueError(
+                "cluster-only SweepSpec fields (fail_at / fleet_size / "
+                "dispatcher) require fleet=<FLEETS name>; a single-device "
+                "cell would silently ignore them"
+            )
         sched = make_scheduler(spec.policy, self.sched_table or self.table, cfg)
         res = simulate_scan(
             sched,

@@ -1,0 +1,151 @@
+"""Reusable python-vs-scan engine conformance harness.
+
+The compiled engines (``repro.core.simfast``, ``repro.core.clusterfast``)
+promise bitwise equality with their Python reference loops on the
+supported family. Every suite that checks that promise used to grow its
+own copy of the same scaffolding — run both engines on identical inputs,
+compare decision traces and ``ServingMetrics`` field by field, assert the
+request conservation law, check loud rejects. This module is the single
+shared copy; ``tests/test_simfast.py`` and ``tests/test_clusterfast.py``
+both build on it rather than keeping third copies in sync.
+
+Not a test file (no ``test_`` prefix): pytest's prepend import mode puts
+``tests/`` on ``sys.path``, so suites just ``import engine_conformance``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterSimulator,
+    ScanEngineUnsupported,
+    SchedulerConfig,
+    ServingSimulator,
+    make_dispatcher,
+    make_scheduler,
+    simulate_scan,
+)
+from repro.core.clusterfast import simulate_cluster_scan
+
+
+def decisions(res):
+    """The (model, exit, batch) dispatch sequence of a traced run."""
+    return [(t.decision.model, t.decision.exit_idx, t.decision.batch_size)
+            for t in res.traces]
+
+
+def assert_metrics_close(a, b, rtol=1e-6):
+    """Field-by-field ServingMetrics comparison at float tolerance.
+
+    For exact runs prefer ``assert a == b`` (frozen dataclass: bitwise);
+    this is for hypothesis sweeps where a tolerance keeps shrinking sane.
+    """
+    da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+    assert da.keys() == db.keys()
+    for key in da:
+        va, vb = da[key], db[key]
+        if key in ("per_model", "per_device"):
+            assert len(va) == len(vb), key
+            for ma, mb in zip(va, vb):
+                for f in ma:
+                    if isinstance(ma[f], str):
+                        assert ma[f] == mb[f], f"{key}.{f}"
+                        continue
+                    np.testing.assert_allclose(
+                        ma[f], mb[f], rtol=rtol, err_msg=f"{key}.{f}")
+        else:
+            np.testing.assert_allclose(va, vb, rtol=rtol, err_msg=key)
+
+
+def assert_conservation(res, n_arrivals):
+    """completions + residual + dropped == arrivals, on any engine."""
+    assert (len(res.completions) + res.metrics.residual_queue
+            + res.metrics.dropped) == n_arrivals
+    ids = [c.req_id for c in res.completions]
+    assert len(ids) == len(set(ids))  # no request served twice
+
+
+def assert_loud_reject(fn, exc=ScanEngineUnsupported, match: str = ""):
+    """The scan engines must refuse what they cannot reproduce, loudly."""
+    with pytest.raises(exc, match=match or None):
+        fn()
+
+
+# -- single-device family ------------------------------------------------------
+
+
+def run_both(policy, table, arrivals, horizon, slo=0.05, model_map=None,
+             num_models=3, **scan_kw):
+    """Identical inputs through ServingSimulator and simulate_scan;
+    conservation asserted on each; (python, scan) results returned."""
+    def sched():
+        return make_scheduler(policy, table, SchedulerConfig(slo=slo))
+
+    py = ServingSimulator(sched(), table, num_models=num_models,
+                          model_map=model_map).run(
+        arrivals, horizon, keep_traces=True)
+    sc = simulate_scan(sched(), table, arrivals, horizon,
+                       num_models=num_models, model_map=model_map,
+                       keep_traces=True, keep_completions=True, **scan_kw)
+    assert_conservation(py, len(arrivals))
+    assert_conservation(sc, len(arrivals))
+    return py, sc
+
+
+# -- cluster family ------------------------------------------------------------
+
+
+def run_both_cluster(
+    devices,
+    arrivals,
+    horizon,
+    policy: str = "edgeserving",
+    dispatcher: str = "least-loaded",
+    power_d: int = 2,
+    slo: float = 0.05,
+    num_models: Optional[int] = None,
+    warmup_tasks: int = 100,
+    **scan_kw,
+):
+    """Identical inputs through ClusterSimulator and simulate_cluster_scan;
+    conservation asserted on each; (python, scan) ClusterResults returned.
+
+    ``scan_kw`` reaches only the compiled engine (``max_queue``,
+    ``keep_completions``, ``factored``, ...)."""
+    py = ClusterSimulator(
+        list(devices),
+        policy=policy,
+        config=SchedulerConfig(slo=slo),
+        dispatcher=make_dispatcher(dispatcher, slo=slo, power_d=power_d),
+        num_models=num_models,
+    ).run(list(arrivals), horizon, warmup_tasks=warmup_tasks)
+    sc = simulate_cluster_scan(
+        list(devices), list(arrivals), horizon,
+        policy=policy,
+        config=SchedulerConfig(slo=slo),
+        dispatcher=dispatcher,
+        power_d=power_d,
+        num_models=num_models,
+        warmup_tasks=warmup_tasks,
+        **scan_kw,
+    )
+    n = len(arrivals)
+    assert_conservation(py, n)
+    if scan_kw.get("keep_completions", True):
+        assert_conservation(sc, n)
+    return py, sc
+
+
+def assert_cluster_equal(py, sc, completions: bool = True):
+    """Bitwise ClusterResult equality: completion log, span, metrics."""
+    if completions:
+        assert len(py.completions) == len(sc.completions)
+        for a, b in zip(py.completions, sc.completions):
+            assert a == b
+    assert py.span == sc.span
+    assert py.metrics == sc.metrics  # frozen dataclass: bitwise

@@ -1,0 +1,284 @@
+"""Cross-implementation equivalence: compiled cluster scan vs ClusterSimulator.
+
+``repro.core.clusterfast`` runs G per-device Algorithm-1 schedulers
+behind a compiled dispatcher step in one jitted ``lax.scan``. This suite
+pins it to the Python ``ClusterSimulator`` through the shared
+``tests/engine_conformance.py`` harness: same dispatch decisions, same
+completion log, same ``ServingMetrics`` — bitwise — across dispatchers,
+fleet sizes, heterogeneous profiles, and the failure/failover leg; plus
+the G=1 collapse onto single-device ``simulate_scan`` (closing the
+triangle with PR 3's G=1-equals-simulator guarantee) and loud rejects
+for everything the fixed-shape state layout cannot express.
+
+The big fleet-scale equivalence cell is ``slow``-marked and runs in the
+CI ``REPRO_RUN_SLOW=1`` job, not tier-1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ClusterSimulator,
+    DeviceSpec,
+    ProfileTable,
+    ScanEngineUnsupported,
+    SchedulerConfig,
+    SweepRunner,
+    SweepSpec,
+    Tracer,
+    make_dispatcher,
+    make_drift,
+    make_fleet,
+    make_scheduler,
+    paper_rate_vector,
+    poisson_arrivals,
+    simulate_scan,
+)
+from repro.core.clusterfast import (
+    SUPPORTED_DISPATCHERS,
+    simulate_cluster_scan,
+    simulate_cluster_scan_batch,
+)
+from engine_conformance import (
+    assert_cluster_equal,
+    assert_conservation,
+    run_both_cluster,
+)
+
+_SMOKE = bool(os.environ.get("REPRO_SIMFAST_SMOKE"))
+
+
+@pytest.fixture(scope="module")
+def table():
+    return ProfileTable.paper_rtx3080().with_batch_saturation(4)
+
+
+def _arrivals(lam, horizon, seed):
+    return poisson_arrivals(paper_rate_vector(lam), horizon, seed=seed)
+
+
+class TestClusterDecisionEquivalence:
+    @given(
+        seed=st.integers(0, 9999),
+        lam=st.sampled_from([40.0, 120.0]),
+        gsize=st.sampled_from([1, 2, 3]),
+        dispatcher=st.sampled_from(SUPPORTED_DISPATCHERS),
+    )
+    @settings(max_examples=4 if _SMOKE else 8, deadline=None)
+    def test_property_bitwise_over_seed_lam_g_dispatcher(
+            self, table, seed, lam, gsize, dispatcher):
+        arrivals = _arrivals(lam, 1.5, seed)
+        py, sc = run_both_cluster(
+            make_fleet("homogeneous", gsize, table), arrivals, 1.5,
+            dispatcher=dispatcher, power_d=gsize)
+        assert_cluster_equal(py, sc)
+
+    @pytest.mark.parametrize("dispatcher", SUPPORTED_DISPATCHERS)
+    def test_fig14_shaped_cell_bitwise(self, table, dispatcher):
+        """The fig14 regime the benchmarks quote: G=3, every dispatcher."""
+        arrivals = _arrivals(150.0, 2.0, 7)
+        py, sc = run_both_cluster(
+            make_fleet("homogeneous", 3, table), arrivals, 2.0,
+            dispatcher=dispatcher, power_d=3)
+        assert_cluster_equal(py, sc)
+
+    def test_heterogeneous_fleet_bitwise(self, table):
+        arrivals = _arrivals(120.0, 2.0, 11)
+        py, sc = run_both_cluster(
+            make_fleet("heterogeneous", 3, table), arrivals, 2.0,
+            dispatcher="least-loaded")
+        assert_cluster_equal(py, sc)
+
+    def test_partial_placement_bitwise(self, table):
+        # model 2 lives on device 1 only; dispatch must respect placement
+        fleet = [
+            DeviceSpec(table=table, name="a", models=(0, 1)),
+            DeviceSpec(table=table, name="b", models=(0, 1, 2)),
+        ]
+        arrivals = _arrivals(100.0, 2.0, 5)
+        py, sc = run_both_cluster(fleet, arrivals, 2.0, dispatcher="jsq")
+        assert_cluster_equal(py, sc)
+
+    def test_g1_collapses_to_simulate_scan_bitwise(self, table):
+        """G=1 fleet == single-device compiled scan == Python simulator,
+        closing the triangle with PR 3's G=1 guarantee."""
+        arrivals = _arrivals(120.0, 2.5, 9)
+        ref = simulate_scan(
+            make_scheduler("edgeserving", table, SchedulerConfig(slo=0.05)),
+            table, arrivals, 2.5, keep_completions=True)
+        got = simulate_cluster_scan(
+            make_fleet("homogeneous", 1, table), arrivals, 2.5)
+        assert len(ref.completions) == len(got.completions)
+        for a, b in zip(ref.completions, got.completions):
+            assert a == b
+        # cluster metrics add per_device rows and span-based utilization;
+        # everything else must be bitwise-identical
+        assert ref.metrics == dataclasses.replace(
+            got.metrics, per_device=(), utilization=ref.metrics.utilization)
+
+    def test_queue_overflow_retries_wider_window(self, table):
+        arrivals = _arrivals(150.0, 1.5, 5)
+        py, sc = run_both_cluster(
+            make_fleet("homogeneous", 2, table), arrivals, 1.5,
+            dispatcher="jsq", max_queue=2)
+        assert_cluster_equal(py, sc)
+
+    def test_empty_arrivals(self, table):
+        py, sc = run_both_cluster(
+            make_fleet("homogeneous", 2, table), [], 1.0)
+        assert_cluster_equal(py, sc)
+        assert sc.metrics.num_completed == 0
+
+
+class TestFailover:
+    def test_single_failure_bitwise(self, table):
+        arrivals = _arrivals(120.0, 2.0, 3)
+        py, sc = run_both_cluster(
+            make_fleet("homogeneous", 2, table, fail_at=((0, 1.0),)),
+            arrivals, 2.0, dispatcher="least-loaded")
+        assert_cluster_equal(py, sc)
+        assert py.metrics.per_device[0].alive is False
+        assert sc.metrics.per_device[0].alive is False
+
+    @pytest.mark.parametrize("dispatcher", SUPPORTED_DISPATCHERS)
+    def test_two_failures_every_dispatcher_bitwise(self, table, dispatcher):
+        arrivals = _arrivals(100.0, 2.0, 13)
+        py, sc = run_both_cluster(
+            make_fleet("homogeneous", 3, table,
+                       fail_at=((0, 0.7), (2, 1.4))),
+            arrivals, 2.0, dispatcher=dispatcher, power_d=3)
+        assert_cluster_equal(py, sc)
+
+    def test_failure_in_heterogeneous_fleet(self, table):
+        arrivals = _arrivals(100.0, 2.0, 17)
+        py, sc = run_both_cluster(
+            make_fleet("heterogeneous", 3, table, fail_at=((1, 0.9),)),
+            arrivals, 2.0, dispatcher="jsq")
+        assert_cluster_equal(py, sc)
+
+
+class TestArrayRollup:
+    def test_arrays_rollup_matches_object_rollup(self, table):
+        """keep_completions=False settles the books through
+        summarize_arrays; metrics must stay bitwise-identical."""
+        arrivals = _arrivals(120.0, 2.0, 21)
+        fleet = make_fleet("heterogeneous", 3, table, fail_at=((1, 1.0),))
+        a = simulate_cluster_scan(fleet, arrivals, 2.0, dispatcher="jsq",
+                                  keep_completions=True)
+        b = simulate_cluster_scan(fleet, arrivals, 2.0, dispatcher="jsq",
+                                  keep_completions=False)
+        assert a.metrics == b.metrics
+        assert b.completions == []
+
+    def test_batch_matches_singles(self, table):
+        lanes = [_arrivals(80.0, 1.5, s) for s in (1, 2, 3)]
+        fleet = make_fleet("homogeneous", 2, table)
+        batch = simulate_cluster_scan_batch(fleet, lanes, 1.5,
+                                            dispatcher="least-loaded")
+        for lane, got in zip(lanes, batch):
+            ref = simulate_cluster_scan(fleet, lane, 1.5,
+                                        dispatcher="least-loaded")
+            assert ref.metrics == got.metrics
+            assert ref.completions == got.completions
+            assert_conservation(got, len(lane))
+
+
+class TestLoudRejection:
+    def test_stability_aware_power_of_d_subsample_rejected(self, table):
+        arrivals = _arrivals(50.0, 1.0, 1)
+        with pytest.raises(ScanEngineUnsupported, match="power-of-d"):
+            simulate_cluster_scan(
+                make_fleet("homogeneous", 3, table), arrivals, 1.0,
+                dispatcher="stability-aware", power_d=2)
+
+    def test_tracer_rejected(self, table):
+        with pytest.raises(ScanEngineUnsupported, match="telemetry"):
+            simulate_cluster_scan(
+                make_fleet("homogeneous", 2, table), [], 1.0,
+                tracer=Tracer())
+
+    def test_service_noise_rejected(self, table):
+        with pytest.raises(ScanEngineUnsupported, match="noise"):
+            simulate_cluster_scan(
+                make_fleet("homogeneous", 2, table), [], 1.0,
+                service_noise_cov=0.05)
+
+    def test_per_device_drift_rejected(self, table):
+        fleet = make_fleet("homogeneous", 2, table,
+                           drift=((0, make_drift("thermal-throttle")),))
+        with pytest.raises(ScanEngineUnsupported, match="drift"):
+            simulate_cluster_scan(fleet, [], 1.0)
+
+    def test_unequal_exit_counts_rejected(self, table):
+        fleet = [
+            DeviceSpec(table=table, name="full"),
+            DeviceSpec(table=table.restrict_exits([table.num_exits - 1]),
+                       name="final-only"),
+        ]
+        with pytest.raises(ScanEngineUnsupported, match="exits"):
+            simulate_cluster_scan(fleet, [], 1.0)
+
+    def test_non_algorithm1_policy_rejected(self, table):
+        with pytest.raises(ScanEngineUnsupported):
+            simulate_cluster_scan(
+                make_fleet("homogeneous", 2, table), [], 1.0,
+                policy="symphony")
+
+    def test_non_numpy_backend_rejected(self, table):
+        with pytest.raises(ScanEngineUnsupported):
+            simulate_cluster_scan(
+                make_fleet("homogeneous", 2, table), [], 1.0,
+                config=SchedulerConfig(slo=0.05, backend="jnp"))
+
+    def test_unknown_dispatcher_is_value_error(self, table):
+        with pytest.raises(ValueError, match="unknown dispatcher"):
+            simulate_cluster_scan(
+                make_fleet("homogeneous", 2, table), [], 1.0,
+                dispatcher="fortune-teller")
+
+
+class TestSweepIntegration:
+    def test_fleet_scan_cell_matches_python_cell(self, table):
+        runner = SweepRunner(table)
+        kw = dict(policy="edgeserving", rate=100.0, seed=7, horizon=1.5,
+                  fleet="homogeneous", fleet_size=2, dispatcher="jsq")
+        py = runner.run_cell(SweepSpec(**kw))
+        sc = runner.run_cell(SweepSpec(engine="scan", **kw))
+        assert py.metrics == sc.metrics
+
+    def test_fleet_scan_cell_with_failover(self, table):
+        runner = SweepRunner(table)
+        kw = dict(policy="edgeserving", rate=100.0, seed=5, horizon=1.5,
+                  fleet="homogeneous", fleet_size=3,
+                  dispatcher="round-robin", fail_at=((1, 0.8),))
+        py = runner.run_cell(SweepSpec(**kw))
+        sc = runner.run_cell(SweepSpec(engine="scan", **kw))
+        assert py.metrics == sc.metrics
+
+    def test_power_d_reaches_both_engines(self, table):
+        runner = SweepRunner(table)
+        kw = dict(policy="edgeserving", rate=80.0, seed=3, horizon=1.5,
+                  fleet="homogeneous", fleet_size=3,
+                  dispatcher="stability-aware", power_d=3)
+        py = runner.run_cell(SweepSpec(**kw))
+        sc = runner.run_cell(SweepSpec(engine="scan", **kw))
+        assert py.metrics == sc.metrics
+
+
+@pytest.mark.slow
+class TestClusterScaling:
+    def test_large_fleet_cell_bitwise(self, table):
+        """Fleet-scale equivalence: G=4 under sustained overload with a
+        mid-run failure — the regime fig17's Part B actually sweeps."""
+        arrivals = _arrivals(240.0, 20.0, 7)
+        assert len(arrivals) > 8_000
+        py, sc = run_both_cluster(
+            make_fleet("homogeneous", 4, table, fail_at=((2, 12.0),)),
+            arrivals, 20.0, dispatcher="least-loaded")
+        assert_cluster_equal(py, sc)

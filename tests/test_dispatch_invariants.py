@@ -1,0 +1,188 @@
+"""Dispatcher invariants, independent of serving engine.
+
+The bitwise conformance suites pin the compiled engines to the Python
+loops; this suite pins what the *policies themselves* must do regardless
+of which engine runs them: JSQ never routes past a strictly
+shorter-loaded candidate, round-robin is arrival-order periodic,
+per-device request accounting sums to fleet totals on both engines, and
+failover re-dispatches its orphans in (arrival, req_id) order.
+
+The policy-level properties run against a synthetic
+:class:`~repro.core.DeviceLoadView` (hypothesis-generated load vectors),
+so they hold for any engine that feeds dispatchers honest views — the
+engines' own views are covered by the conformance suites.
+"""
+
+from __future__ import annotations
+
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ClusterSimulator,
+    DeviceLoadView,
+    Request,
+    SchedulerConfig,
+    make_dispatcher,
+    make_fleet,
+    paper_rate_vector,
+    poisson_arrivals,
+    ProfileTable,
+)
+from repro.core.clusterfast import simulate_cluster_scan
+from engine_conformance import run_both_cluster
+
+
+class _FakeView(DeviceLoadView):
+    """A fleet reduced to the numbers dispatchers may observe."""
+
+    def __init__(self, queued, backlog=None, alive=None):
+        self._queued = list(queued)
+        self._backlog = list(backlog or [float(q) for q in queued])
+        self._alive = list(alive or [True] * len(self._queued))
+
+    def healthy(self, d):
+        return self._alive[d]
+
+    def total_queued(self, d):
+        return self._queued[d]
+
+    def effective_backlog(self, d):
+        return self._backlog[d]
+
+    def predicted_completion(self, d, model):
+        return self._backlog[d] + 0.010
+
+
+@pytest.fixture(scope="module")
+def table():
+    return ProfileTable.paper_rtx3080().with_batch_saturation(4)
+
+
+class TestPolicyProperties:
+    @given(seed=st.integers(0, 10**6), g=st.integers(2, 8))
+    @settings(max_examples=50, deadline=None)
+    def test_jsq_never_skips_a_strictly_shorter_queue(self, seed, g):
+        rng = random.Random(seed)
+        queued = [rng.randint(0, 50) for _ in range(g)]
+        eligible = sorted(rng.sample(range(g), rng.randint(1, g)))
+        pick = make_dispatcher("jsq").pick(0, eligible, _FakeView(queued))
+        assert pick in eligible
+        assert all(queued[pick] <= queued[d] for d in eligible)
+
+    @given(seed=st.integers(0, 10**6), g=st.integers(2, 8))
+    @settings(max_examples=50, deadline=None)
+    def test_least_loaded_never_skips_a_lighter_backlog(self, seed, g):
+        rng = random.Random(seed)
+        backlog = [rng.uniform(0.0, 10.0) for _ in range(g)]
+        eligible = sorted(rng.sample(range(g), rng.randint(1, g)))
+        view = _FakeView([0] * g, backlog=backlog)
+        pick = make_dispatcher("least-loaded").pick(0, eligible, view)
+        assert pick in eligible
+        assert all(backlog[pick] <= backlog[d] for d in eligible)
+
+    @given(
+        g=st.integers(1, 6),
+        n=st.integers(1, 40),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_round_robin_is_arrival_order_periodic(self, g, n):
+        disp = make_dispatcher("round-robin")
+        disp.reset()
+        view = _FakeView([0] * g)
+        eligible = list(range(g))
+        picks = [disp.pick(0, eligible, view) for _ in range(n)]
+        assert picks == [i % g for i in range(n)]
+
+    def test_stability_aware_full_scan_tracks_predicted_completion(self):
+        view = _FakeView([0, 0, 0], backlog=[3.0, 0.5, 2.0])
+        disp = make_dispatcher("stability-aware", power_d=3)
+        disp.reset(seed=0)
+        assert disp.pick(0, [0, 1, 2], view) == 1
+
+
+class TestEngineAccounting:
+    @given(
+        seed=st.integers(0, 9999),
+        dispatcher=st.sampled_from(
+            ("round-robin", "jsq", "least-loaded")),
+    )
+    @settings(max_examples=6, deadline=None)
+    def test_per_device_counts_sum_to_fleet_totals(self, table, seed,
+                                                   dispatcher):
+        arrivals = poisson_arrivals(paper_rate_vector(100.0), 1.5, seed=seed)
+        py, sc = run_both_cluster(
+            make_fleet("homogeneous", 3, table), arrivals, 1.5,
+            dispatcher=dispatcher)
+        for res in (py, sc):
+            per = res.metrics.per_device
+            # full placement, no failures: every arrival routed exactly once
+            assert sum(d.dispatched for d in per) == len(arrivals)
+            assert (sum(d.num_completed for d in per)
+                    == res.metrics.num_completed)
+            assert sum(d.dropped for d in per) == res.metrics.dropped
+        assert py.dispatch_counts == sc.dispatch_counts
+
+    def test_failover_redispatch_counts_against_survivor(self, table):
+        arrivals = poisson_arrivals(paper_rate_vector(120.0), 2.0, seed=4)
+        py, sc = run_both_cluster(
+            make_fleet("homogeneous", 2, table, fail_at=((0, 1.0),)),
+            arrivals, 2.0, dispatcher="least-loaded")
+        for res in (py, sc):
+            per = res.metrics.per_device
+            # orphans re-dispatched to the survivor count twice (once per
+            # routing), so totals exceed raw arrivals by the failover volume
+            assert sum(d.dispatched for d in per) >= len(arrivals)
+            assert (len(res.completions) + res.metrics.residual_queue
+                    + res.metrics.dropped) == len(arrivals)
+        assert py.dispatch_counts == sc.dispatch_counts
+
+
+class TestFailoverOrder:
+    def test_orphans_redispatch_in_arrival_then_req_id_order(self, table):
+        """White-box: preload the doomed device's queues with shuffled
+        arrival times and ids, kill it, and read the re-dispatch order off
+        a round-robin dispatcher (pick k lands on survivor k mod G)."""
+        sim = ClusterSimulator(
+            make_fleet("homogeneous", 4, table),
+            config=SchedulerConfig(slo=0.05),
+            dispatcher=make_dispatcher("round-robin"),
+        )
+        sim.run([], 0.0)  # initialise per-run device state
+        doomed = sim._devs[0]
+        reqs = [
+            Request(req_id=i, model=i % 3, arrival=a, data_id=0)
+            for i, a in [(5, 0.3), (2, 0.1), (9, 0.1), (1, 0.7), (7, 0.2)]
+        ]
+        for r in reqs:
+            doomed.queues[r.model].push(r)
+        sim.dispatcher.reset()
+        stranded = sim._fail(0, 1.0)
+        assert stranded == 0
+        expected = sorted(reqs, key=lambda r: (r.arrival, r.req_id))
+        # round-robin over the 3 survivors: k-th re-dispatch -> survivor
+        # [1, 2, 3][k % 3]; read each survivor's queues back in FIFO order
+        landed = {1: [], 2: [], 3: []}
+        for d in (1, 2, 3):
+            for q in sim._devs[d].queues:
+                landed[d].extend(q.pop_batch(len(q)))
+        for k, r in enumerate(expected):
+            assert r in landed[(1, 2, 3)[k % 3]], (
+                f"re-dispatch {k} ({r.req_id}) landed out of "
+                f"(arrival, req_id) order")
+
+
+class TestCompiledFailoverOrder:
+    def test_scan_engine_preserves_redispatch_order(self, table):
+        """The compiled engine's host-side failover must replay the same
+        (arrival, req_id) orphan order; with round-robin routing any
+        reordering changes dispatch counts and metrics."""
+        arrivals = poisson_arrivals(paper_rate_vector(140.0), 2.0, seed=8)
+        py, sc = run_both_cluster(
+            make_fleet("homogeneous", 3, table, fail_at=((1, 0.9),)),
+            arrivals, 2.0, dispatcher="round-robin")
+        assert py.dispatch_counts == sc.dispatch_counts
+        assert py.metrics == sc.metrics

@@ -2,15 +2,18 @@
 
 ``tests/data/golden_metrics.json`` freezes the headline numbers the docs
 and benchmark write-ups quote: the four fig12 mean-violation summaries
-(greedy vs lattice at 30 ms / 50 ms SLO on the batch-saturating table) and
-the full ``ServingMetrics`` row of the fig4 lambda=140 cell. This test
-recomputes them with the reference Python engine, so any change to the
-scheduler, simulator, traffic generator, or metrics accounting that moves
-a quoted number fails loudly here instead of silently rotting the docs.
+(greedy vs lattice at 30 ms / 50 ms SLO on the batch-saturating table),
+the full ``ServingMetrics`` row of the fig4 lambda=140 cell, and the
+fig14 cluster summary rows (stability-aware / round-robin / JSQ
+violation percentages on the heterogeneous leg, plus the G=1 scaling
+cell). This test recomputes them with the reference Python engine, so
+any change to the scheduler, simulator, dispatcher, traffic generator,
+or metrics accounting that moves a quoted number fails loudly here
+instead of silently rotting the docs.
 
-The scan engine is pinned to the Python engine decision-by-decision in
-``tests/test_simfast.py``; together the two suites anchor both engines to
-these numbers.
+The scan engines are pinned to the Python engines decision-by-decision
+in ``tests/test_simfast.py`` / ``tests/test_clusterfast.py``; together
+the suites anchor every engine to these numbers.
 """
 
 from __future__ import annotations
@@ -56,6 +59,32 @@ def test_fig12_summary_pins(golden, policy, slo, quoted):
     mean = sum(viols) / len(viols)
     np.testing.assert_allclose(mean, entry["mean_violation_ratio"], rtol=1e-9)
     assert f"{mean * 100:.3f}%" == quoted
+
+
+@pytest.mark.parametrize("cell,quoted", [
+    ("het/stability-aware", "3.02%"),
+    ("het/round-robin", "18.65%"),
+    ("het/jsq", "13.30%"),
+    ("scaling/G1/least-loaded", "0.45%"),
+])
+def test_fig14_summary_pins(golden, cell, quoted):
+    """The fig14 rows the ROADMAP quotes (stability-aware ~3.0% vs
+    round-robin ~18.7% on the heterogeneous leg), recomputed through the
+    Python cluster engine — the cluster tier's first golden guard."""
+    entry = golden["fig14"][cell]
+    assert entry["quoted"] == quoted
+
+    leg, dispatcher = cell.split("/")[0], cell.rsplit("/", 1)[1]
+    fleet, size, rate = (
+        ("heterogeneous", 4, 640.0) if leg == "het"
+        else ("homogeneous", 1, 140.0))
+    runner = SweepRunner(ProfileTable.paper_rtx3080())
+    res = runner.run_cell(SweepSpec(
+        policy="edgeserving", scenario="mmpp", rate=rate, seed=7,
+        horizon=6.0, fleet=fleet, fleet_size=size, dispatcher=dispatcher))
+    got = res.metrics.violation_ratio
+    np.testing.assert_allclose(got, entry["violation_ratio"], rtol=1e-9)
+    assert f"{got * 100:.2f}%" == quoted
 
 
 def test_fig4_lam140_cell(golden):

@@ -1,0 +1,253 @@
+"""Statistical correctness of the seed-band layer (``core/seedband.py``).
+
+``summarize_band`` must agree with a plain-numpy reference (percentile
+band and normal-approximation mean CI), the mean-CI width must shrink
+like 1/sqrt(n) on a fixed serving workload, and the per-seed metric
+columns must be bitwise-stable across reruns and across vmap-vs-loop
+execution (chunk size changes how many lanes share one XLA launch, never
+any lane's result).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PoissonProcess,
+    ProfileTable,
+    SchedulerConfig,
+    columns_from_requests,
+    make_fleet,
+    make_scenario,
+    make_scheduler,
+    paper_rate_vector,
+)
+from repro.core.clusterfast import simulate_cluster_scan
+from repro.core.simfast import simulate_scan_batch
+from repro.core.seedband import (
+    BandSummary,
+    compare_bands,
+    simulate_cluster_scan_seedband,
+    simulate_scan_seedband,
+    summarize_band,
+    _z_for_level,
+)
+
+
+@pytest.fixture(scope="module")
+def table():
+    return ProfileTable.paper_rtx3080().with_batch_saturation(4)
+
+
+def _sched(table):
+    return make_scheduler("edgeserving", table, SchedulerConfig(slo=0.05))
+
+
+class TestSummarizeBand:
+    def test_normal_quantiles(self):
+        # two-sided standard-normal quantiles, to well under MC noise
+        assert _z_for_level(0.90) == pytest.approx(1.6448536269, abs=1e-9)
+        assert _z_for_level(0.95) == pytest.approx(1.9599639845, abs=1e-9)
+        assert _z_for_level(0.99) == pytest.approx(2.5758293035, abs=1e-9)
+
+    @pytest.mark.parametrize("dist", ["normal", "exponential", "bimodal"])
+    def test_matches_numpy_reference(self, dist):
+        rng = np.random.default_rng(7)
+        if dist == "normal":
+            col = rng.normal(3.0, 0.5, size=501)
+        elif dist == "exponential":
+            col = rng.exponential(2.0, size=501)
+        else:
+            col = np.concatenate(
+                [rng.normal(0.0, 0.1, 250), rng.normal(5.0, 0.1, 251)])
+        s = summarize_band(col, level=0.95)
+        assert s.n == 501
+        assert s.mean == float(col.mean())
+        assert s.sd == float(col.std(ddof=1))
+        # the documented tail points: 100*(1-level)/2 on either side
+        tail = 100.0 * (1.0 - 0.95) / 2.0
+        lo, hi = np.percentile(col, [tail, 100.0 - tail])
+        assert s.band_lo == float(lo)
+        assert s.band_hi == float(hi)
+        assert s.band_lo == pytest.approx(np.percentile(col, 2.5), rel=1e-9)
+        assert s.band_hi == pytest.approx(np.percentile(col, 97.5), rel=1e-9)
+        half = _z_for_level(0.95) * s.sd / math.sqrt(501)
+        assert s.ci_lo == pytest.approx(s.mean - half, rel=1e-12)
+        assert s.ci_hi == pytest.approx(s.mean + half, rel=1e-12)
+
+    def test_level_changes_band_tails(self):
+        col = np.linspace(0.0, 1.0, 1001)
+        s80 = summarize_band(col, level=0.80)
+        assert s80.band_lo == pytest.approx(0.10, abs=1e-9)
+        assert s80.band_hi == pytest.approx(0.90, abs=1e-9)
+
+    def test_single_seed_degenerates(self):
+        s = summarize_band([0.25])
+        assert s.mean == 0.25
+        assert s.sd == 0.0
+        assert s.ci_lo == s.ci_hi == 0.25
+
+    def test_rejects_bad_input(self):
+        with pytest.raises(ValueError):
+            summarize_band([])
+        with pytest.raises(ValueError):
+            summarize_band(np.zeros((3, 3)))
+        with pytest.raises(ValueError):
+            summarize_band([1.0, 2.0], level=1.5)
+
+    def test_str_is_readable(self):
+        s = summarize_band([1.0, 2.0, 3.0])
+        assert "n=3" in str(s)
+        assert isinstance(s, BandSummary)
+
+
+class TestCompareBands:
+    def test_detects_a_real_gap(self):
+        rng = np.random.default_rng(3)
+        a = rng.normal(0.18, 0.01, 400)
+        b = rng.normal(0.03, 0.01, 400)
+        gap = compare_bands(a, b)
+        assert gap.significant
+        assert gap.ci_lo > 0.1
+        assert gap.gap == pytest.approx(0.15, abs=0.01)
+
+    def test_same_distribution_is_not_significant(self):
+        rng = np.random.default_rng(5)
+        a = rng.normal(0.10, 0.02, 400)
+        b = rng.normal(0.10, 0.02, 400)
+        assert not compare_bands(a, b).significant
+
+    def test_needs_two_seeds_per_side(self):
+        with pytest.raises(ValueError):
+            compare_bands([1.0], [1.0, 2.0])
+
+
+class TestCIShrinksWithSeeds:
+    def test_mean_ci_width_shrinks_like_inverse_sqrt_n(self, table):
+        """Fixed workload, n in {10, 100, 1000}: each 10x in seeds must
+        shrink the mean CI by ~1/sqrt(10) (loose band: MC noise)."""
+        proc = make_scenario("poisson", paper_rate_vector(170.0))
+        band = simulate_scan_seedband(
+            _sched(table), table, proc, 0.6, range(1000), chunk=250)
+        col = band.column("violation_ratio")
+        assert col.std() > 0  # the cell must actually vary seed to seed
+        widths = [summarize_band(col[:n]).ci_width for n in (10, 100, 1000)]
+        assert widths[0] > widths[1] > widths[2] > 0
+        for wide, narrow in zip(widths, widths[1:]):
+            assert 0.15 < narrow / wide < 0.55  # ideal 1/sqrt(10) ~ 0.316
+
+
+class TestColumnStability:
+    def test_rerun_is_bitwise_identical(self, table):
+        proc = make_scenario("poisson", paper_rate_vector(120.0))
+        a = simulate_scan_seedband(
+            _sched(table), table, proc, 0.8, range(12), chunk=12)
+        b = simulate_scan_seedband(
+            _sched(table), table, proc, 0.8, range(12), chunk=12)
+        assert a.metrics == b.metrics  # frozen dataclasses: bitwise
+        assert np.array_equal(a.column("p95_latency"),
+                              b.column("p95_latency"))
+
+    def test_vmap_vs_loop_chunking_is_bitwise_identical(self, table):
+        """chunk=12 (one vmapped launch) vs chunk=1 (plain loop) vs an
+        uneven split: per-seed columns may not move by a single bit."""
+        proc = make_scenario("poisson", paper_rate_vector(120.0))
+        args = (_sched(table), table, proc, 0.8, range(12))
+        vmapped = simulate_scan_seedband(*args, chunk=12)
+        loop = simulate_scan_seedband(*args, chunk=1)
+        uneven = simulate_scan_seedband(*args, chunk=5)
+        assert vmapped.metrics == loop.metrics == uneven.metrics
+
+    def test_cluster_chunking_is_bitwise_identical(self, table):
+        proc = make_scenario("poisson", paper_rate_vector(100.0))
+        fleet = make_fleet("homogeneous", 2, table)
+        kw = dict(dispatcher="jsq")
+        a = simulate_cluster_scan_seedband(fleet, proc, 0.8, range(6),
+                                           chunk=6, **kw)
+        b = simulate_cluster_scan_seedband(fleet, proc, 0.8, range(6),
+                                           chunk=2, **kw)
+        assert a.metrics == b.metrics
+
+    def test_cluster_band_matches_single_runs(self, table):
+        proc = make_scenario("poisson", paper_rate_vector(100.0))
+        fleet = make_fleet("homogeneous", 2, table)
+        band = simulate_cluster_scan_seedband(
+            fleet, proc, 0.8, range(4), dispatcher="least-loaded")
+        for seed, got in zip(band.seeds, band.metrics):
+            ref = simulate_cluster_scan(
+                fleet, proc.generate(0.8, seed=seed), 0.8,
+                dispatcher="least-loaded", keep_completions=False)
+            assert got == ref.metrics
+
+    def test_chunk_must_be_positive(self, table):
+        proc = make_scenario("poisson", paper_rate_vector(100.0))
+        with pytest.raises(ValueError):
+            simulate_scan_seedband(
+                _sched(table), table, proc, 0.5, range(2), chunk=0)
+
+
+class TestTraceColumns:
+    """The columnar trace fast path seedband rides is bitwise-identical
+    to generating Request lanes (same draws, same sort order)."""
+
+    @pytest.mark.parametrize(
+        "scenario", ["poisson", "mmpp", "diurnal", "flash-crowd"])
+    def test_columns_match_request_lanes(self, scenario):
+        proc = make_scenario(scenario, paper_rate_vector(120.0))
+        for seed in (0, 7):
+            ref = columns_from_requests(proc.generate(1.5, seed=seed))
+            col = proc.generate_columns(1.5, seed=seed)
+            assert np.array_equal(ref.arrival, col.arrival)
+            assert np.array_equal(ref.model, col.model)
+            assert np.array_equal(ref.data_id, col.data_id)
+            assert ref.deadline is None and col.deadline is None
+
+    def test_deadline_vector_stamped(self):
+        rates = paper_rate_vector(100.0)
+        proc = PoissonProcess(
+            rates, deadlines=[0.03 + 0.01 * m for m in range(len(rates))])
+        ref = columns_from_requests(proc.generate(1.0, seed=3))
+        col = proc.generate_columns(1.0, seed=3)
+        assert np.array_equal(ref.deadline, col.deadline)
+
+    def test_trace_replay_falls_back_through_generate(self):
+        proc = make_scenario("trace-replay", paper_rate_vector(80.0))
+        ref = columns_from_requests(proc.generate(1.0, seed=2))
+        col = proc.generate_columns(1.0, seed=2)
+        assert np.array_equal(ref.arrival, col.arrival)
+        assert np.array_equal(ref.model, col.model)
+
+    def test_indexing_materialises_requests(self):
+        proc = make_scenario("poisson", paper_rate_vector(60.0))
+        reqs = proc.generate(1.0, seed=1)
+        cols = proc.generate_columns(1.0, seed=1)
+        assert len(cols) == len(reqs)
+        for i in (0, len(reqs) // 2, len(reqs) - 1):
+            assert cols[i] == reqs[i]
+
+    def test_scan_batch_accepts_columns(self, table):
+        proc = make_scenario("poisson", paper_rate_vector(120.0))
+        req_lanes = [proc.generate(0.8, seed=s) for s in range(3)]
+        col_lanes = [proc.generate_columns(0.8, seed=s) for s in range(3)]
+        a = simulate_scan_batch(_sched(table), table, req_lanes, 0.8,
+                                keep_completions=True)
+        b = simulate_scan_batch(_sched(table), table, col_lanes, 0.8,
+                                keep_completions=True)
+        for ra, rb in zip(a, b):
+            assert ra.metrics == rb.metrics
+            assert ra.completions == rb.completions
+
+    def test_cluster_scan_accepts_columns(self, table):
+        proc = make_scenario("poisson", paper_rate_vector(100.0))
+        fleet = make_fleet("heterogeneous", 2, table)
+        a = simulate_cluster_scan(
+            fleet, proc.generate(0.8, seed=4), 0.8, dispatcher="jsq",
+            keep_completions=True)
+        b = simulate_cluster_scan(
+            fleet, proc.generate_columns(0.8, seed=4), 0.8,
+            dispatcher="jsq", keep_completions=True)
+        assert a.metrics == b.metrics
+        assert a.completions == b.completions

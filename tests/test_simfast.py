@@ -5,8 +5,10 @@
 drift. This suite pins the scan path to the reference event loop
 decision-by-decision: same (model, exit, batch) dispatch sequence, same
 ``ServingMetrics`` (bitwise on the fixed grids we ship, tight-tolerance
-under hypothesis), and the same conservation law, all through one shared
-harness so both engines face identical inputs and identical assertions.
+under hypothesis), and the same conservation law, all through the shared
+``tests/engine_conformance.py`` harness so both engines face identical
+inputs and identical assertions (and the cluster-scan suite reuses the
+same scaffolding instead of keeping a third copy).
 
 The 10^6-request scaling check is ``slow``-marked: it runs in the CI
 smoke step (``REPRO_SIMFAST_SMOKE=1``, which also implies the slow
@@ -40,6 +42,12 @@ from repro.core import (
     summarize,
     summarize_arrays,
 )
+from engine_conformance import (
+    assert_conservation as _conservation,
+    assert_metrics_close as _assert_metrics_close,
+    decisions as _decisions,
+    run_both as _run_both,
+)
 
 SUPPORTED_POLICIES = (
     "edgeserving", "edgeserving-lattice", "allfinal-deadline-aware",
@@ -54,53 +62,6 @@ _SMOKE = bool(os.environ.get("REPRO_SIMFAST_SMOKE"))
 @pytest.fixture(scope="module")
 def table():
     return ProfileTable.paper_rtx3080().with_batch_saturation(4)
-
-
-def _decisions(res):
-    return [(t.decision.model, t.decision.exit_idx, t.decision.batch_size)
-            for t in res.traces]
-
-
-def _assert_metrics_close(a, b, rtol=1e-6):
-    """Field-by-field ServingMetrics comparison at float tolerance."""
-    da, db = dataclasses.asdict(a), dataclasses.asdict(b)
-    assert da.keys() == db.keys()
-    for key in da:
-        va, vb = da[key], db[key]
-        if key in ("per_model", "per_device"):
-            assert len(va) == len(vb), key
-            for ma, mb in zip(va, vb):
-                for f in ma:
-                    np.testing.assert_allclose(
-                        ma[f], mb[f], rtol=rtol, err_msg=f"{key}.{f}")
-        else:
-            np.testing.assert_allclose(va, vb, rtol=rtol, err_msg=key)
-
-
-def _conservation(res, n_arrivals):
-    """completions + residual + dropped == arrivals, on either engine."""
-    assert (len(res.completions) + res.metrics.residual_queue
-            + res.metrics.dropped) == n_arrivals
-    ids = [c.req_id for c in res.completions]
-    assert len(ids) == len(set(ids))  # no request served twice
-
-
-def _run_both(policy, table, arrivals, horizon, slo=0.05, model_map=None,
-              **scan_kw):
-    """Shared harness: identical inputs through both engines, conservation
-    asserted on each, then (python, scan) results returned for comparison."""
-    def sched():
-        return make_scheduler(policy, table, SchedulerConfig(slo=slo))
-
-    py = ServingSimulator(sched(), table, num_models=3,
-                          model_map=model_map).run(
-        arrivals, horizon, keep_traces=True)
-    sc = simulate_scan(sched(), table, arrivals, horizon, num_models=3,
-                       model_map=model_map, keep_traces=True,
-                       keep_completions=True, **scan_kw)
-    _conservation(py, len(arrivals))
-    _conservation(sc, len(arrivals))
-    return py, sc
 
 
 class TestDecisionEquivalence:
@@ -231,7 +192,12 @@ class TestLoudRejection:
         dict(drift="thermal-throttle"),
         dict(scenario="trace-replay"),
         dict(backend="jnp"),
-        dict(fleet="homogeneous", fleet_size=2),
+        # fleets themselves route to clusterfast since PR 10; what stays
+        # rejected is what its state layout cannot express (telemetry
+        # reconstruction, power-of-d RNG subsampling).
+        dict(fleet="homogeneous", fleet_size=2, trace=True),
+        dict(fleet="homogeneous", fleet_size=3,
+             dispatcher="stability-aware"),
     ])
     def test_sweep_cell_rejects(self, table, kw):
         spec = SweepSpec(policy="edgeserving", rate=40.0, horizon=1.0,
